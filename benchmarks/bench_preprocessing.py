@@ -1,0 +1,32 @@
+"""Paper Table IV — preprocessing cost: DBG grouping and
+partitioning+scheduling wall time per graph (single thread, like the
+paper's one-CPU-thread measurement). Both are O(E)/O(V)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import gas
+from repro.core.engine import HeterogeneousEngine
+from repro.graphs import datasets
+
+from .common import GEOM, emit
+
+
+def run(graphs=("r16s", "g17s", "ggs", "ams", "hds", "tcs", "pks", "ljs")):
+    out = {}
+    for name in graphs:
+        g = datasets.load(name)
+        eng = HeterogeneousEngine(g, gas.make_pagerank(), geom=GEOM,
+                                  n_lanes=8, path="ref")
+        s = eng.stats()
+        out[name] = (s["t_dbg_ms"], s["t_partition_schedule_ms"])
+        emit(f"tab4.{name}.dbg_ms", s["t_dbg_ms"] * 1e3,
+             f"V={g.num_vertices} E={g.num_edges}")
+        emit(f"tab4.{name}.partition_schedule_ms",
+             s["t_partition_schedule_ms"] * 1e3,
+             f"partitions={s['partitions']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Fig. 12 — PR scaling with the number of lanes (pipelines).
+
+Makespan = max over lanes of measured lane time. The paper observes
+near-linear scaling on regular graphs and saturation on small/irregular
+ones (partition-switch overhead) — we report the same speedup curve.
+"""
+from __future__ import annotations
+
+from repro.core import gas
+from repro.core.engine import HeterogeneousEngine
+from repro.graphs import datasets
+
+from .common import GEOM, cpu_calibrated_hw, emit, mteps
+
+
+def run(graphs=("r16s", "g17s", "ggs"), lane_counts=(1, 2, 4, 8, 16)):
+    out = {}
+    for name in graphs:
+        g = datasets.load(name)
+        app = gas.make_pagerank(max_iters=2)
+        hw, _ = cpu_calibrated_hw(g, app)
+        base = None
+        for nl in lane_counts:
+            eng = HeterogeneousEngine(g, app, geom=GEOM, n_lanes=nl,
+                                      path="ref", hw=hw)
+            lt = eng.time_lanes(repeats=2)
+            t = max(lt) if lt else 0.0
+            base = base or t
+            out[(name, nl)] = t
+            emit(f"fig12.{name}.lanes{nl}", t * 1e6,
+                 f"speedup={base / max(t, 1e-12):.2f}x "
+                 f"mteps={mteps(g, max(t, 1e-12)):.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Shared benchmark utilities: CPU-calibrated perf model + CSV output."""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import gas, perf_model
+from repro.core.engine import HeterogeneousEngine
+from repro.core.types import Geometry
+from repro.graphs import datasets
+
+GEOM = Geometry(U=4096, W=512, T=512, E_BLK=256, big_batch=8)
+
+# Datasets per benchmark tier (CPU wall-time budget)
+SMALL = ["ggs", "ams", "g17s", "hws"]
+MEDIUM = ["r16s", "tcs", "pks", "unif16"]
+LARGE = ["r18s", "hds", "bbs", "ljs"]
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def cpu_calibrated_hw(graph, app=None, geom=GEOM, n_samples=12):
+    """Calibrate the perf model's coefficients on this host by timing a
+    few partitions on both pipeline types (the paper benchmarks memory
+    latency to fit Eq. 4's a and b; we least-squares all four terms)."""
+    app = app or gas.make_pagerank(max_iters=2)
+    eng = HeterogeneousEngine(graph, app, geom=geom, n_lanes=1, path="ref",
+                              plan_mode="model",
+                              hw=perf_model.TPU_V5E.clone(combine="sum"))
+    from repro.kernels import ops
+    import jax
+    import jax.numpy as jnp
+    vprops = eng.init_props()
+    samples = []
+    infos = sorted([i for i in eng.infos if i.num_edges > 0],
+                   key=lambda i: -i.num_edges)
+    for i in infos[:n_samples]:
+        from repro.core import partition as part
+        for kind, work in (
+                ("little", part.block_little(eng.edges, i, geom)),
+                ("big", part.block_big(eng.edges, [i], geom))):
+            entry = ops.materialize_entry(work, 0, work.n_blocks)
+            if entry is None:
+                continue
+            f = jax.jit(lambda vp: ops.run_entry(
+                entry, vp, app.scatter, app.gather, "ref")[0])
+            f(vprops).block_until_ready()
+            f(vprops).block_until_ready()
+            ts = []
+            for _ in range(5):
+                t0 = time.perf_counter()
+                f(vprops).block_until_ready()
+                ts.append(time.perf_counter() - t0)
+            samples.append((i, geom, kind, float(np.median(ts))))
+    return perf_model.calibrate(samples, perf_model.TPU_V5E), samples
+
+
+def mteps(graph, seconds_per_iter: float) -> float:
+    return graph.num_edges / seconds_per_iter / 1e6

@@ -1,0 +1,70 @@
+"""Generate the EXPERIMENTS.md roofline/dry-run tables from
+results/dryrun/*.json. Run: PYTHONPATH=src python -m benchmarks.report"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f}"
+
+
+def dryrun_table(mesh_filter: str) -> str:
+    rows = []
+    for f in sorted(glob.glob("results/dryrun/*.json")):
+        r = json.load(open(f))
+        mp = "multipod" if r.get("multi_pod") else "pod"
+        if mp != mesh_filter:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP | "
+                        f"{r['reason'][:58]} | | | | |")
+            continue
+        m, t = r["memory"], r["roofline"]
+        frac = (t["analytic"]["flops_model"] / r["chips"]
+                / 197e12 / t["roofline_bound_s"]
+                if t["roofline_bound_s"] else 0)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| args {fmt_bytes(m['argument_bytes'])} / "
+            f"peak* {fmt_bytes(m['peak_tpu_estimate_bytes'])} GB"
+            f"{'' if m['fits_16g_hbm'] else ' **OVER**'} "
+            f"| {t['t_compute_s']:.4f} | {t['t_memory_s']:.4f} "
+            f"| {t['t_collective_s']:.4f} | {t['dominant']} "
+            f"| {frac:.2f} |")
+    head = ("| arch | shape | status | memory/chip | t_comp s | t_mem s "
+            "| t_coll s | dominant | MFU-bound |\n"
+            "|---|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def collectives_summary(mesh_filter: str) -> str:
+    rows = []
+    for f in sorted(glob.glob("results/dryrun/*.json")):
+        r = json.load(open(f))
+        mp = "multipod" if r.get("multi_pod") else "pod"
+        if mp != mesh_filter or r["status"] != "ok":
+            continue
+        c = r["collectives"]
+        parts = [f"{k}={v/1e6:.0f}MB" for k, v in c.items()
+                 if k not in ("count", "total") and v > 0]
+        rows.append(f"| {r['arch']} | {r['shape']} | {c['count']:.0f} "
+                    f"| {c['total']/1e6:.1f} | {' '.join(parts) or '-'} |")
+    head = ("| arch | shape | #coll (trip-count x) | total MB/chip "
+            "| breakdown |\n|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def main():
+    print("## Single-pod (16x16 = 256 chips) baseline\n")
+    print(dryrun_table("pod"))
+    print("\n## Multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table("multipod"))
+    print("\n## Collective payloads (single-pod)\n")
+    print(collectives_summary("pod"))
+
+
+if __name__ == "__main__":
+    main()

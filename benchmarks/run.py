@@ -1,0 +1,64 @@
+"""Benchmark driver — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines (see benchmarks/common.emit).
+
+  Fig. 9   bench_pipelines      Big/Little measured vs modelled time
+  Fig. 10  bench_heterogeneity  lane-combination sweep + model selection
+  Fig. 12  bench_scalability    speedup vs number of lanes
+  Tab. IV  bench_preprocessing  DBG / partition+schedule cost
+  Tab. V   bench_sota           vs monolithic (ThunderGP-like) baseline
+  Fig. 13  bench_roofline       resource-centric roofline analogue
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help="comma list: pipelines,heterogeneity,scalability,"
+                         "preprocessing,sota,roofline")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller graph set (CI-speed)")
+    args = ap.parse_args()
+    want = (None if args.only == "all"
+            else set(args.only.split(",")))
+
+    from . import (bench_heterogeneity, bench_pipelines,
+                   bench_preprocessing, bench_roofline, bench_scalability,
+                   bench_sota)
+
+    suites = [
+        ("pipelines", lambda: bench_pipelines.run(
+            graphs=["ggs", "hws"] if args.quick else None)),
+        ("heterogeneity", lambda: bench_heterogeneity.run(
+            graphs=["r16s", "unif16"] if args.quick else None,
+            n_lanes=4 if args.quick else 8)),
+        ("scalability", lambda: bench_scalability.run(
+            graphs=("ggs",) if args.quick else ("r16s", "g17s", "ggs"),
+            lane_counts=(1, 2, 4) if args.quick else (1, 2, 4, 8, 16))),
+        ("preprocessing", lambda: bench_preprocessing.run(
+            graphs=("ggs", "ams") if args.quick
+            else ("r16s", "g17s", "ggs", "ams", "hds", "tcs", "pks",
+                  "ljs"))),
+        ("sota", lambda: bench_sota.run(
+            graphs=("r16s",) if args.quick
+            else ("r16s", "g17s", "tcs", "pks", "hws"),
+            n_lanes=4 if args.quick else 8)),
+        ("roofline", lambda: bench_roofline.run(
+            graphs=("r16s",) if args.quick else ("r16s", "tcs"),
+            n_lanes=4 if args.quick else 8)),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if want and name not in want:
+            continue
+        t0 = time.time()
+        fn()
+        print(f"suite.{name},{(time.time() - t0) * 1e6:.0f},done",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Serve a small model with batched requests through the wave engine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models.api import build_model
+from repro.serve.engine import Request, ServeEngine
+
+cfg = reduced(get_config("internlm2_1p8b"))
+model = build_model(cfg)
+params = model.init(jax.random.key(0))
+engine = ServeEngine(model, params, max_batch=4, max_seq=96)
+
+rng = np.random.default_rng(0)
+requests = [
+    Request(tokens=rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32),
+            max_new_tokens=12)
+    for n in rng.integers(8, 32, 10)
+]
+stats = engine.serve(requests)
+print("generated (first 3 requests):")
+for r in requests[:3]:
+    print("  ", r.out.tolist())
+print({k: round(v, 3) if isinstance(v, float) else v
+       for k, v in stats.items()})

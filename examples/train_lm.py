@@ -1,0 +1,41 @@
+"""End-to-end driver: train a ~15M-param qwen2-family model for a few
+hundred steps on the synthetic pipeline, with checkpointing + restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig
+from repro.models.api import build_model
+from repro.optim.adamw import adamw
+from repro.optim.schedule import warmup_cosine
+from repro.train.loop import Trainer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--arch", default="qwen2_1p5b")
+args = ap.parse_args()
+
+import dataclasses
+cfg = dataclasses.replace(reduced(get_config(args.arch), layers=4),
+                          d_model=128, d_ff=512)
+model = build_model(cfg)
+n_params = sum(p.size for p in jax.tree.leaves(
+    jax.eval_shape(model.init, jax.random.key(0))))
+print(f"arch={cfg.name} (reduced) params={n_params/1e6:.1f}M")
+
+trainer = Trainer(
+    model,
+    adamw(lr=warmup_cosine(peak=1e-3, warmup=30, total=args.steps)),
+    DataConfig(vocab_size=cfg.vocab_size, seq_len=128, global_batch=16),
+    run_dir="runs/train_lm",
+    checkpoint_every=100,
+)
+params, _, losses = trainer.run(args.steps, log_every=25)
+print(f"loss: {losses[:10].mean():.3f} (first 10) -> "
+      f"{losses[-10:].mean():.3f} (last 10)")
+assert losses[-10:].mean() < losses[:10].mean(), "loss must decrease"
+print("done — checkpoints in runs/train_lm/ckpt (restart resumes exactly)")

@@ -1,0 +1,120 @@
+"""COO graph container and basic format utilities.
+
+The paper (ReGraph §II-A) uses the standard COO representation with row
+indices (source vertices) in ascending order. We keep the same canonical
+form and add the degree statistics that drive degree-based grouping (DBG)
+and the performance model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Graph:
+    """A directed graph in COO format.
+
+    Invariants (enforced by :func:`canonicalize`):
+      * ``src``/``dst`` are int32 arrays of equal length E.
+      * edges sorted by (src, dst).
+      * ``num_vertices`` >= max(src.max(), dst.max()) + 1.
+    """
+
+    num_vertices: int
+    src: np.ndarray
+    dst: np.ndarray
+    weights: Optional[np.ndarray] = None
+    name: str = "graph"
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def avg_degree(self) -> float:
+        return self.num_edges / max(1, self.num_vertices)
+
+    def out_degrees(self) -> np.ndarray:
+        return np.bincount(self.src, minlength=self.num_vertices).astype(np.int32)
+
+    def in_degrees(self) -> np.ndarray:
+        return np.bincount(self.dst, minlength=self.num_vertices).astype(np.int32)
+
+    def reversed(self) -> "Graph":
+        """Transpose (used by pull-based execution: edges point dst->src)."""
+        g = Graph(
+            num_vertices=self.num_vertices,
+            src=self.dst.copy(),
+            dst=self.src.copy(),
+            weights=None if self.weights is None else self.weights.copy(),
+            name=self.name + "_T",
+        )
+        return canonicalize(g)
+
+
+def canonicalize(g: Graph) -> Graph:
+    """Sort edges by (src, dst) — the paper's ascending-row COO form."""
+    order = np.lexsort((g.dst, g.src))
+    g.src = np.ascontiguousarray(g.src[order], dtype=np.int32)
+    g.dst = np.ascontiguousarray(g.dst[order], dtype=np.int32)
+    if g.weights is not None:
+        g.weights = np.ascontiguousarray(g.weights[order], dtype=np.float32)
+    return g
+
+
+def from_edges(
+    src, dst, num_vertices: Optional[int] = None, weights=None, name: str = "graph",
+    dedup: bool = True,
+) -> Graph:
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    if num_vertices is None:
+        num_vertices = int(max(src.max(initial=-1), dst.max(initial=-1)) + 1)
+    if dedup and src.size:
+        key = src.astype(np.int64) * num_vertices + dst.astype(np.int64)
+        _, idx = np.unique(key, return_index=True)
+        src, dst = src[idx], dst[idx]
+        if weights is not None:
+            weights = np.asarray(weights, dtype=np.float32)[idx]
+    g = Graph(num_vertices=num_vertices, src=src, dst=dst,
+              weights=None if weights is None else np.asarray(weights, np.float32),
+              name=name)
+    return canonicalize(g)
+
+
+def to_csr(g: Graph):
+    """Return (indptr, indices[, weights]) CSR of the canonical COO."""
+    indptr = np.zeros(g.num_vertices + 1, dtype=np.int64)
+    np.add.at(indptr, g.src + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    return indptr, g.dst.copy(), (None if g.weights is None else g.weights.copy())
+
+
+def relabel(g: Graph, perm: np.ndarray, name_suffix: str = "_dbg") -> Graph:
+    """Relabel vertices: new_id = perm[old_id]; re-canonicalize."""
+    assert perm.shape[0] == g.num_vertices
+    g2 = Graph(
+        num_vertices=g.num_vertices,
+        src=perm[g.src].astype(np.int32),
+        dst=perm[g.dst].astype(np.int32),
+        weights=None if g.weights is None else g.weights.copy(),
+        name=g.name + name_suffix,
+    )
+    return canonicalize(g2)
+
+
+def degree_stats(g: Graph) -> dict:
+    ind = g.in_degrees()
+    outd = g.out_degrees()
+    return {
+        "V": g.num_vertices,
+        "E": g.num_edges,
+        "avg_deg": g.avg_degree,
+        "max_in": int(ind.max(initial=0)),
+        "max_out": int(outd.max(initial=0)),
+        "p99_in": int(np.percentile(ind, 99)) if g.num_vertices else 0,
+        "zero_in_frac": float((ind == 0).mean()) if g.num_vertices else 0.0,
+    }

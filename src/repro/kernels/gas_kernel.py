@@ -1,0 +1,153 @@
+"""Shared Pallas TPU kernel body for the Big/Little GAS pipelines.
+
+One grid step processes one E_BLK edge block that is homogeneous in
+(source window, destination tile):
+
+  * the source-vertex window (W props) arrives in VMEM via BlockSpec —
+    Pallas grid pipelining double-buffers consecutive windows, which IS
+    the Little pipeline's ping-pong buffer;
+  * source properties are gathered with a one-hot (E_BLK x W) product —
+    MXU work replacing per-lane random loads;
+  * the update values are routed into the (T,) destination tile
+    accumulator with a one-hot (T x E_BLK) product for 'sum' (MXU) or a
+    masked reduce for 'min'/'max'/'or' (VPU) — the TPU analogue of the
+    paper's butterfly Data Router;
+  * blocks are sorted by tile, so output revisits are consecutive and the
+    accumulator tile stays resident in VMEM between steps.
+
+The same body serves both pipelines; they differ only in what the window
+input *is* (raw vprops windows for Little, compacted unique-source windows
+for Big) — exactly the paper's division of labour.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.gas import GATHER_IDENTITY
+
+INT_MODES = ("or",)
+
+
+def _gather_src(window, src_local, e_blk, w, is_int):
+    """props[e] = window[src_local[e]] via one-hot product (MXU/VPU)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (e_blk, w), 1)
+    onehot = src_local[:, None] == iota
+    if is_int:
+        return jnp.sum(jnp.where(onehot, window[None, :], 0), axis=1)
+    return jnp.dot(onehot.astype(window.dtype), window,
+                   preferred_element_type=window.dtype)
+
+
+def _route_dst(vals, dst_local, valid, mode, t, e_blk, acc_dtype):
+    """tile_contrib[t] = gather-combine of vals routed to dst tile slots."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (t, e_blk), 0)
+    onehot = (dst_local[None, :] == iota) & (valid[None, :] != 0)
+    if mode == "sum":
+        return jnp.dot(onehot.astype(acc_dtype), vals.astype(acc_dtype),
+                       preferred_element_type=acc_dtype)
+    ident = GATHER_IDENTITY[mode]
+    cand = jnp.where(onehot, vals[None, :].astype(acc_dtype),
+                     jnp.asarray(ident, acc_dtype))
+    if mode == "min":
+        return jnp.min(cand, axis=1)
+    if mode == "max":
+        return jnp.max(cand, axis=1)
+    if mode == "or":
+        return jax.lax.reduce(cand, np.int32(0), jax.lax.bitwise_or, (1,))
+    raise ValueError(mode)
+
+
+def make_gas_kernel(scatter_fn: Callable, mode: str, e_blk: int, w: int,
+                    t: int, acc_dtype, n_blocks: int):
+    """Build the kernel body (closes over the Scatter UDF — the paper's
+    accScatter runs inside the pipeline).
+
+    The running tile accumulator lives in VMEM *scratch* (persists across
+    grid steps — the Gather-PE destination buffer of the paper) and is
+    flushed to the output block on the last edge block of each tile.
+    """
+    ident = GATHER_IDENTITY[mode]
+    is_int = mode in INT_MODES
+
+    def kernel(wid_ref, tid_ref, tfirst_ref, vwin_ref, src_ref, dst_ref,
+               w_ref, valid_ref, out_ref, acc_ref):
+        b = pl.program_id(0)
+        window = vwin_ref[0]          # (W,) source props in VMEM
+        src_local = src_ref[0]        # (E_BLK,) int32
+        dst_local = dst_ref[0]
+        wts = w_ref[0]
+        valid = valid_ref[0]
+
+        @pl.when(tfirst_ref[b] == 1)
+        def _init():
+            acc_ref[...] = jnp.full((t,), ident, acc_dtype)
+
+        props = _gather_src(window, src_local, e_blk, w, is_int)
+        vals = scatter_fn(props, wts)
+        contrib = _route_dst(vals, dst_local, valid, mode, t, e_blk, acc_dtype)
+        if mode == "sum":
+            acc_ref[...] += contrib
+        elif mode == "min":
+            acc_ref[...] = jnp.minimum(acc_ref[...], contrib)
+        elif mode == "max":
+            acc_ref[...] = jnp.maximum(acc_ref[...], contrib)
+        else:  # or
+            acc_ref[...] = acc_ref[...] | contrib
+
+        # flush on the last block of this tile
+        nxt = jnp.where(b + 1 < n_blocks,
+                        tfirst_ref[jnp.minimum(b + 1, n_blocks - 1)], 1)
+        @pl.when(nxt == 1)
+        def _flush():
+            out_ref[0] = acc_ref[...]
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scatter_fn", "mode", "e_blk", "w", "t", "n_out_tiles",
+                     "interpret"),
+)
+def gas_pallas_call(vwin, src_local, dst_local, weights, valid,
+                    window_id, tile_id, tile_first, *,
+                    scatter_fn, mode, e_blk, w, t, n_out_tiles,
+                    interpret=True):
+    """Run the blocked GAS kernel. All shape args static.
+
+    vwin:      (n_windows, W) property windows (raw or compacted)
+    src_local: (n_blocks, E_BLK) int32 — offsets within the block's window
+    dst_local: (n_blocks, E_BLK) int32 — offsets within the block's tile
+    returns (n_out_tiles, T) accumulator tiles.
+    """
+    n_blocks = src_local.shape[0]
+    acc_dtype = vwin.dtype
+    kernel = make_gas_kernel(scatter_fn, mode, e_blk, w, t, acc_dtype,
+                             n_blocks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda b, wid, tid, tf: (wid[b], 0)),
+            pl.BlockSpec((1, e_blk), lambda b, wid, tid, tf: (b, 0)),
+            pl.BlockSpec((1, e_blk), lambda b, wid, tid, tf: (b, 0)),
+            pl.BlockSpec((1, e_blk), lambda b, wid, tid, tf: (b, 0)),
+            pl.BlockSpec((1, e_blk), lambda b, wid, tid, tf: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t), lambda b, wid, tid, tf: (tid[b], 0)),
+        scratch_shapes=[pltpu.VMEM((t,), acc_dtype)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out_tiles, t), acc_dtype),
+        interpret=interpret,
+    )(window_id, tile_id, tile_first, vwin, src_local, dst_local,
+      weights, valid)

@@ -1,0 +1,32 @@
+"""Little pipeline — dense-partition GAS kernel (paper §III-C).
+
+Dense partitions touch most source windows, so the kernel streams raw
+vprops windows HBM→VMEM via BlockSpec (Pallas grid pipelining
+double-buffers consecutive steps: the ping-pong buffer). No dedup, no
+compaction — the paper's argument that locality makes those techniques
+dead weight for dense partitions. The "jump access mechanism" (skipping
+unread buffer ranges) falls out of the window_id prefetch map: untouched
+windows are never fetched.
+"""
+from __future__ import annotations
+
+from .gas_kernel import gas_pallas_call
+
+
+def little_pipeline(vprops_padded, src_local, dst_local, weights, valid,
+                    window_id, tile_id, tile_first, *, scatter_fn, mode,
+                    geom, n_out_tiles, interpret=True):
+    """Run one dense-partition slice.
+
+    vprops_padded: (V_pad,) current vertex properties, V_pad % W == 0.
+    Blocked arrays as produced by partition.block_little (possibly a
+    tile-aligned slice rebased by ops.materialize_entry).
+    Returns (n_out_tiles, T) accumulator tiles.
+    """
+    vwin = vprops_padded.reshape(-1, geom.W)
+    return gas_pallas_call(
+        vwin, src_local, dst_local, weights, valid,
+        window_id, tile_id, tile_first,
+        scatter_fn=scatter_fn, mode=mode,
+        e_blk=geom.E_BLK, w=geom.W, t=geom.T, n_out_tiles=n_out_tiles,
+        interpret=interpret)

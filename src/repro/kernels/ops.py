@@ -1,0 +1,119 @@
+"""Jit'd wrappers and dispatch for the GAS pipeline kernels.
+
+``materialize_entry`` turns a (work, block-range) plan entry into
+device-resident arrays with tile indices rebased to the slice, after
+snapping the range to tile boundaries — so every destination tile is
+written by exactly one entry and the engine can merge with a plain
+scatter-set regardless of gather mode.
+
+``run_entry`` dispatches to the Pallas kernel (interpret=True on CPU,
+compiled on TPU) or the pure-jnp reference path — identical math, used
+both as the CPU fast path and as the oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.types import BlockedEdges, Geometry
+from . import ref as ref_mod
+from .big_pipeline import big_pipeline
+from .little_pipeline import little_pipeline
+
+
+def default_path() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def snap_down(blocked: BlockedEdges, x: int) -> int:
+    """Largest tile boundary <= x (x == n_blocks allowed). Applying this
+    one rule to both endpoints keeps adjacent slices exactly abutting."""
+    n = blocked.n_blocks
+    x = max(0, min(x, n))
+    if x >= n:
+        return n
+    tf = blocked.tile_first
+    while x > 0 and tf[x] != 1:
+        x -= 1
+    return x
+
+
+def snap_to_tiles(blocked: BlockedEdges, lo: int, hi: int):
+    """Snap [lo, hi) to tile boundaries; may return an empty range, which
+    the engine drops (the work is covered by the neighbouring slice)."""
+    return snap_down(blocked, lo), snap_down(blocked, hi)
+
+
+def materialize_entry(blocked: BlockedEdges, lo: int, hi: int):
+    """Build the device payload for one plan entry (tile-snapped).
+    Returns None when the snapped range is empty."""
+    lo, hi = snap_to_tiles(blocked, lo, hi)
+    if hi <= lo:
+        return None
+    t0 = int(blocked.tile_id[lo])
+    t1 = int(blocked.tile_id[hi - 1]) + 1 if hi > lo else t0
+    tile_id = blocked.tile_id[lo:hi] - t0
+    tf = blocked.tile_first[lo:hi].copy()
+    if tf.shape[0]:
+        tf[0] = 1
+    payload = {
+        "kind": blocked.kind,
+        "geom": blocked.geom,
+        "n_out_tiles": t1 - t0,
+        "src_local": jnp.asarray(blocked.src_local[lo:hi]),
+        "dst_local": jnp.asarray(blocked.dst_local[lo:hi]),
+        "weights": jnp.asarray(blocked.weights[lo:hi]),
+        "valid": jnp.asarray(blocked.valid[lo:hi], jnp.int32),
+        "window_id": jnp.asarray(blocked.window_id[lo:hi]),
+        "tile_id": jnp.asarray(tile_id),
+        "tile_first": jnp.asarray(tf),
+        "tile_idx": jnp.asarray(blocked.tile_dst_start[t0:t1]
+                                // blocked.geom.T),
+        "unique_src": (None if blocked.unique_src is None
+                       else jnp.asarray(blocked.unique_src)),
+        "n_blocks": hi - lo,
+        "num_real_edges": int(blocked.valid[lo:hi].sum()),
+    }
+    return payload
+
+
+def run_entry(entry: dict, vprops_padded, scatter_fn, mode: str,
+              path: Optional[str] = None):
+    """Returns (tiles (n_out_tiles, T), tile_idx (n_out_tiles,))."""
+    path = path or default_path()
+    geom: Geometry = entry["geom"]
+    args = (entry["src_local"], entry["dst_local"], entry["weights"],
+            entry["valid"], entry["window_id"], entry["tile_id"],
+            entry["tile_first"])
+    if path == "ref":
+        if entry["kind"] == "big":
+            vwin = vprops_padded[entry["unique_src"]].reshape(-1, geom.W)
+        else:
+            vwin = vprops_padded.reshape(-1, geom.W)
+        tiles = ref_mod.gas_ref(vwin, *args, scatter_fn=scatter_fn, mode=mode,
+                                t=geom.T, n_out_tiles=entry["n_out_tiles"])
+    else:
+        interpret = jax.default_backend() != "tpu"
+        if entry["kind"] == "big":
+            tiles = big_pipeline(vprops_padded, entry["unique_src"], *args,
+                                 scatter_fn=scatter_fn, mode=mode, geom=geom,
+                                 n_out_tiles=entry["n_out_tiles"],
+                                 interpret=interpret)
+        else:
+            tiles = little_pipeline(vprops_padded, *args,
+                                    scatter_fn=scatter_fn, mode=mode,
+                                    geom=geom,
+                                    n_out_tiles=entry["n_out_tiles"],
+                                    interpret=interpret)
+    return tiles, entry["tile_idx"]
+
+
+def merge_tiles(accum_padded, tiles, tile_idx, t: int):
+    """Scatter-set entry results into the global accumulator. Tiles are
+    disjoint across entries by construction (snap_to_tiles)."""
+    acc = accum_padded.reshape(-1, t)
+    acc = acc.at[tile_idx].set(tiles.astype(acc.dtype))
+    return acc.reshape(-1)

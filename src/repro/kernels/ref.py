@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Each oracle computes the same function as its Pallas kernel from the same
+blocked inputs, using only plain jnp ops (gather / scatter-at / segmented
+scan). Tests assert_allclose kernels (interpret=True) against these.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.gas import GATHER_IDENTITY
+
+
+def _segment_or(flat_idx, vals, size):
+    """OR-scatter via sort + segmented inclusive scan (no lax.scatter-or)."""
+    order = jnp.argsort(flat_idx)
+    idx = flat_idx[order]
+    v = vals[order]
+
+    def combine(a, b):
+        va, sa = a
+        vb, sb = b
+        return jnp.where(sa == sb, va | vb, vb), sb
+
+    scanned, segs = jax.lax.associative_scan(combine, (v, idx))
+    is_last = jnp.concatenate([segs[1:] != segs[:-1],
+                               jnp.ones((1,), bool)])
+    out = jnp.zeros((size,), v.dtype)
+    safe_idx = jnp.where(is_last, segs, size)  # dump non-last to OOB (dropped)
+    return out.at[safe_idx].set(jnp.where(is_last, scanned, 0), mode="drop")
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scatter_fn", "mode", "t", "n_out_tiles"))
+def gas_ref(vwin, src_local, dst_local, weights, valid, window_id, tile_id,
+            tile_first, *, scatter_fn, mode, t, n_out_tiles):
+    """Oracle for kernels.gas_kernel.gas_pallas_call."""
+    del tile_first
+    win = vwin[window_id]                                   # (n_blocks, W)
+    props = jnp.take_along_axis(win, src_local, axis=1)     # (n_blocks, E)
+    vals = scatter_fn(props, weights)
+    ident = GATHER_IDENTITY[mode]
+    flat = tile_id[:, None] * t + dst_local                 # (n_blocks, E)
+    flat = jnp.where(valid != 0, flat, n_out_tiles * t)     # pads -> OOB drop
+    flat = flat.reshape(-1)
+    v = vals.reshape(-1)
+    size = n_out_tiles * t
+    if mode == "sum":
+        out = jnp.zeros((size,), vals.dtype).at[flat].add(v, mode="drop")
+    elif mode == "min":
+        out = jnp.full((size,), ident, vals.dtype).at[flat].min(v, mode="drop")
+    elif mode == "max":
+        out = jnp.full((size,), ident, vals.dtype).at[flat].max(v, mode="drop")
+    elif mode == "or":
+        # append one dummy OOB element so every segment id is valid for sort
+        out = _segment_or(flat, v, size)
+    else:
+        raise ValueError(mode)
+    return out.reshape(n_out_tiles, t)
+
+
+def edge_ref(graph_src, graph_dst, graph_w, vprops, scatter_fn, mode,
+             num_vertices):
+    """Ground-truth straight from the edge list (no blocking) — the
+    end-to-end oracle used by engine tests."""
+    props = vprops[graph_src]
+    vals = scatter_fn(props, graph_w)
+    ident = GATHER_IDENTITY[mode]
+    if mode == "sum":
+        out = jnp.zeros((num_vertices,), vals.dtype).at[graph_dst].add(vals)
+    elif mode == "min":
+        out = jnp.full((num_vertices,), ident, vals.dtype).at[graph_dst].min(vals)
+    elif mode == "max":
+        out = jnp.full((num_vertices,), ident, vals.dtype).at[graph_dst].max(vals)
+    elif mode == "or":
+        out = _segment_or(graph_dst, vals, num_vertices)
+    else:
+        raise ValueError(mode)
+    return out
+
+
+def moe_dispatch_ref(tokens, router_logits, w_gate, w_up, w_down, top_k):
+    """Oracle for the heterogeneous MoE dispatch: exact top-k gated
+    mixture-of-experts FFN (no capacity drop)."""
+    weights, idx = jax.lax.top_k(router_logits, top_k)        # (n_tok, k)
+    weights = jax.nn.softmax(weights, axis=-1)
+    out = jnp.zeros_like(tokens)
+    for k in range(top_k):
+        e = idx[:, k]                                          # (n_tok,)
+        h = jax.nn.silu(jnp.einsum("td,tdf->tf", tokens, w_gate[e])) \
+            * jnp.einsum("td,tdf->tf", tokens, w_up[e])
+        y = jnp.einsum("tf,tfd->td", h, w_down[e])
+        out = out + weights[:, k:k + 1] * y
+    return out
+
+
+def flash_attention_ref(q, k, v, causal=True, window=None):
+    """Oracle for the blockwise attention kernel: exact softmax attention.
+    q,k,v: (heads, seq, head_dim). Optional sliding window."""
+    h, s, d = q.shape
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask[None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v)

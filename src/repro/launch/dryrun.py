@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count on first init). Everything else follows.
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs import (ARCH_IDS, SHAPES, cache_specs, get_config,  # noqa: E402
+                           input_specs, supports)
+from repro.launch import roofline as rl                      # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.models.api import build_model                     # noqa: E402
+from repro.optim.adafactor import adafactor                  # noqa: E402
+from repro.optim.adamw import adamw                          # noqa: E402
+from repro.sharding.specs import (batch_shardings,           # noqa: E402
+                                  cache_shardings, replicated,
+                                  tree_shardings)
+from repro.train.step import make_train_step                 # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _save_hlo(arch, shape_name, multi_pod, hlo_text):
+    """Compressed HLO next to the JSON so measurement improvements can
+    reprocess offline without recompiling."""
+    try:
+        import zstandard as zstd
+        m = "multipod" if multi_pod else "pod"
+        out = RESULTS / f"{arch}.{shape_name}.{m}.hlo.zst"
+        out.write_bytes(zstd.ZstdCompressor(level=9).compress(
+            hlo_text.encode()))
+    except Exception as e:  # noqa: BLE001 — HLO capture is best-effort
+        print(f"[warn] hlo save failed: {e}")
+
+
+def make_optimizer(cfg):
+    if cfg.optimizer == "adafactor":
+        return adafactor(lr=1e-3)
+    return adamw(lr=3e-4, state_dtype="bfloat16")
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = supports(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    param_sds = model.param_specs()
+    param_sh = tree_shardings(param_sds, mesh)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt = make_optimizer(cfg)
+            opt_sds = jax.eval_shape(opt.init, param_sds)
+            opt_sh = tree_shardings(opt_sds, mesh)
+            batch_sh = batch_shardings(specs["batch"], mesh)
+            import jax.numpy as jnp
+            step = make_train_step(
+                model, opt, micro_batches=cfg.micro_batches,
+                accum_dtype=jnp.dtype(cfg.grad_accum_dtype))
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),   # params/opt update in place
+            ).lower(param_sds, opt_sds, specs["batch"])
+        elif shape.kind == "prefill":
+            batch_sh = batch_shardings(specs["batch"], mesh)
+
+            def serve_prefill(params, batch):
+                return model.prefill(params, batch)
+
+            lowered = jax.jit(
+                serve_prefill, in_shardings=(param_sh, batch_sh),
+            ).lower(param_sds, specs["batch"])
+        else:  # decode
+            cache_sds = specs["cache"]
+            cache_sh = cache_shardings(cache_sds, mesh)
+            tok_sh = batch_shardings(specs["token"], mesh)
+
+            def serve_decode(params, cache, token, length):
+                return model.decode_step(params, cache, token, length)
+
+            lowered = jax.jit(
+                serve_decode,
+                in_shardings=(param_sh, cache_sh, tok_sh, replicated(mesh)),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),     # KV cache updates in place
+            ).lower(param_sds, cache_sds, specs["token"], specs["length"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(mem)                      # proves it fits
+    cost = compiled.cost_analysis()
+    print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
+    hlo = compiled.as_text()
+    _save_hlo(arch, shape_name, multi_pod, hlo)
+    coll = rl.collective_bytes(hlo)
+    chips = int(np.prod(mesh.devices.shape))
+    upcast = rl.cpu_upcast_estimate(cfg, chips)
+    terms = rl.roofline_terms(cost, coll, chips, cfg, shape)
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    return {
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": peak,
+            "cpu_bf16_upcast_estimate_bytes": upcast,
+            "peak_tpu_estimate_bytes": max(peak - upcast, 0),
+            "fits_16g_hbm": bool(max(peak - upcast, 0) <= 16 * 1024**3),
+        },
+        "collectives": coll,
+        "roofline": terms,
+    }
+
+
+def cell_path(arch, shape_name, multi_pod, tag=""):
+    m = "multipod" if multi_pod else "pod"
+    t = f".{tag}" if tag else ""
+    return RESULTS / f"{arch}.{shape_name}.{m}{t}.json"
+
+
+def run_cell(arch, shape_name, multi_pod, force=False, tag=""):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = cell_path(arch, shape_name, multi_pod, tag)
+    if out.exists() and not force:
+        rec = json.loads(out.read_text())
+        print(f"[cached] {out.name}: {rec.get('status')}")
+        return rec
+    print(f"=== {arch} x {shape_name} x "
+          f"{'multipod' if multi_pod else 'singlepod'} ===", flush=True)
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod)
+    except Exception as e:  # noqa: BLE001 — recorded, dry-run must continue
+        rec = {"status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    rec.setdefault("arch", arch)
+    rec.setdefault("shape", shape_name)
+    rec["multi_pod"] = multi_pod
+    out.write_text(json.dumps(rec, indent=1))
+    print(f"[{rec['status']}] {out.name}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    summary = {"ok": 0, "skipped": 0, "error": 0}
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, force=args.force,
+                               tag=args.tag)
+                summary[rec["status"]] = summary.get(rec["status"], 0) + 1
+    print("SUMMARY:", summary)
+    if summary.get("error"):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,343 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (per EXPERIMENTS.md §Roofline, v5e-like targets):
+  compute    = FLOPs_per_chip / peak_flops
+  memory     = bytes_per_chip / hbm_bw
+  collective = collective_bytes_per_chip / link_bw
+
+``cost_analysis()`` on the SPMD-partitioned module reports PER-CHIP flops
+and bytes (the module is the per-device program). collective bytes are
+parsed from the HLO text: operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (async -start variants
+counted once, -done skipped).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+HW = {
+    "peak_flops": 197e12,     # bf16 / chip
+    "hbm_bw": 819e9,          # B/s / chip
+    "link_bw": 50e9,          # B/s / ICI link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(tok_dtype, 4)
+
+
+def _split_computations(hlo_text: str):
+    """Return ({computation_name: body_lines}, entry_name)."""
+    comps = {}
+    entry = None
+    name, body = None, []
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->.*{",
+                     line)
+        if m:
+            name, body = m.group(2), []
+            if m.group(1):
+                entry = name
+            continue
+        if name is not None:
+            if line.strip() == "}":
+                comps[name] = body
+                name = None
+            else:
+                body.append(line)
+    return comps, entry
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s+[\w\-]+\(")
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_shape_bytes(dt, dims)
+               for dt, dims in _SHAPE_RE.findall(type_str))
+
+
+def _build_shape_map(hlo_text: str) -> Dict[str, int]:
+    """instruction name -> output bytes (operand shapes are not inlined
+    at call sites in compiled HLO text)."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            out[m.group(1)] = _type_bytes(m.group(2))
+    return out
+
+
+def _line_collective_bytes(line: str, shape_map: Dict[str, int]):
+    m = re.search(r"=\s*(.*?)\s+([a-z\-]+)\(", line)
+    if not m:
+        return None
+    op = m.group(2)
+    base = None
+    for c in _COLLECTIVES:
+        if op == c or op == c + "-start":
+            base = c
+            break
+    if base is None:
+        return None
+    lp = line.index("(")
+    rp = line.index(")", lp)
+    operands = re.findall(r"%([\w\.\-]+)", line[lp + 1:rp])
+    b = sum(shape_map.get(o, 0) for o in operands)
+    if b == 0:  # entry-style HLO inlines operand shapes
+        b = sum(_shape_bytes(dt, dims)
+                for dt, dims in _SHAPE_RE.findall(line[lp + 1:rp]))
+    if b == 0:  # last resort: output type (== operand for all-reduce)
+        b = _type_bytes(m.group(1))
+    return base, b
+
+
+def _loop_trip_count(cond_lines) -> int:
+    """XLA scan loops compare the induction var against a constant."""
+    consts = []
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def cpu_upcast_estimate(cfg, chips: int) -> int:
+    """XLA:CPU has no native bf16 dot, so it hoists f32 copies of every
+    bf16 weight out of the layer loop (visible as convert(param) ops in
+    the HLO) — a backend artifact absent on TPU (native bf16 MXU). The
+    hoisted copies are ~2x the per-chip bf16 param bytes. Used to derive
+    peak_tpu_estimate_bytes; instruction-level summing is wrong because
+    XLA reuses buffers (liveness != sum of outputs)."""
+    return int(2 * param_count(cfg) * 2 / chips)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective operand bytes, with while-loop bodies multiplied by
+    their trip count (XLA cost analysis counts loop bodies ONCE — a 61x
+    undercount for per-layer collectives inside the layer scan)."""
+    comps, entry = _split_computations(hlo_text)
+    shape_map = _build_shape_map(hlo_text)
+    # map body computation -> trip count (from the loop's condition comp)
+    trip: Dict[str, int] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            if "while(" not in line:
+                continue
+            mc = re.search(r"condition=%?([\w\.\-]+)", line)
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            if mc and mb:
+                trip[mb.group(1)] = _loop_trip_count(
+                    comps.get(mc.group(1), []))
+
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+
+    def walk(comp_name, multiplier, seen):
+        if comp_name in seen or comp_name not in comps:
+            return
+        seen = seen | {comp_name}
+        for line in comps[comp_name]:
+            got = _line_collective_bytes(line, shape_map)
+            if got:
+                c, b = got
+                out[c] += b * multiplier
+                out["count"] += multiplier
+            if "while(" in line:
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                if mb:
+                    walk(mb.group(1),
+                         multiplier * trip.get(mb.group(1), 1), seen)
+            elif "call(" in line or "conditional(" in line:
+                for mc in re.finditer(
+                        r"(?:to_apply|true_computation|false_computation|"
+                        r"branch_computations=\{)[=]?%?([\w\.\-]+)", line):
+                    walk(mc.group(1), multiplier, seen)
+
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    walk(entry, 1, frozenset())
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(cost: dict, coll: dict, chips: int, cfg=None, shape=None,
+                   hw: dict = HW) -> dict:
+    """Three-term roofline. compute/memory use the ANALYTIC workload model
+    (XLA cost_analysis counts scan bodies once — useless for L-layer
+    models; its raw numbers are recorded for reference with that caveat).
+    collective uses the trip-count-corrected HLO parse (per-chip program
+    payloads)."""
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    cb = float(coll.get("total", 0.0))
+    an = analytic_costs(cfg, shape) if cfg is not None else None
+    flops_chip = (an["flops_exec"] / chips) if an else hlo_flops
+    bytes_chip = (an["hbm_bytes"] / chips) if an else hlo_bytes
+    t_compute = flops_chip / hw["peak_flops"]
+    t_memory = bytes_chip / hw["hbm_bw"]
+    t_collective = cb / hw["link_bw"]
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)], key=lambda kv: kv[1])[0]
+    tot = max(t_compute, t_memory, t_collective)
+    out = {
+        "flops_per_chip": flops_chip,
+        "bytes_per_chip": bytes_chip,
+        "collective_bytes_per_chip": cb,
+        "hlo_flops_per_chip_raw": hlo_flops,
+        "hlo_bytes_per_chip_raw": hlo_bytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "roofline_bound_s": tot,
+    }
+    if an:
+        out["analytic"] = an
+        # useful fraction: model (6N D) flops vs executed (remat, padding)
+        out["mfu_upper_bound"] = (an["flops_model"] / chips
+                                  / hw["peak_flops"]) / tot if tot else 0.0
+    return out
+
+
+def analytic_costs(cfg, shape) -> dict:
+    """Global FLOPs and HBM bytes from the workload's structure.
+
+    flops_model — the 'useful' count (6·N_active·tokens train,
+                  2·N_active·tokens inference) + exact attention term.
+    flops_exec  — what actually executes: remat multiplies the forward
+                  by ~2x in train (fwd + bwd(2x fwd) + remat fwd = 8N·T),
+                  MoE padding multiplies expert FFN flops by
+                  padded/used capacity.
+    hbm_bytes   — params read/written (+optimizer state traffic in train),
+                  activations through HBM between remat blocks, KV-cache
+                  traffic for decode.
+    """
+    B, S = shape.batch, shape.seq
+    train = shape.kind == "train"
+    tokens = B * S if shape.kind != "decode" else B
+    n_active = param_count(cfg, active_only=True)
+    n_total = param_count(cfg, active_only=False)
+    p_bytes = 2.0  # bf16
+
+    # attention flops (fwd): 4·B·S·ctx·H·hd x 0.5 causal
+    H, hd, L = cfg.num_heads, cfg.hd, cfg.num_layers
+    if shape.kind == "decode":
+        ctx = S
+        attn_fwd = 4.0 * B * 1 * min(ctx, cfg.sliding_window or ctx) \
+            * H * hd * L
+    else:
+        eff_ctx = min(S, cfg.sliding_window or S)
+        attn_fwd = 4.0 * B * S * eff_ctx * 0.5 * H * hd * L
+    if cfg.family == "ssm":
+        attn_fwd = 0.0
+
+    mm_fwd = 2.0 * n_active * tokens
+    fwd = mm_fwd + attn_fwd
+    if train:
+        flops_model = 3.0 * fwd                      # fwd + 2x bwd
+        flops_exec = (4.0 if cfg.remat else 3.0) * fwd
+    else:
+        flops_model = fwd
+        flops_exec = fwd
+    # MoE capacity padding overhead on the expert-FFN share
+    if cfg.family == "moe":
+        from ..models.moe_schedule import biglittle_split
+        E, K = cfg.num_experts_padded, cfg.top_k
+        Fm = cfg.moe_d_ff or cfg.d_ff
+        used = tokens * K
+        if cfg.moe_dispatch == "biglittle":
+            n_hot, c_hot, c_cold = biglittle_split(E, K, max(tokens, 1),
+                                                   round_to=16)
+            padded = n_hot * c_hot + (E - n_hot) * c_cold
+        else:
+            padded = E * max(8, int(used / E * 1.25))
+        ffn_share = 6.0 * cfg.d_model * Fm * K * tokens  # 3 mats x 2
+        overhead = ffn_share * max(padded / max(used, 1) - 1.0, 0.0)
+        flops_exec += overhead * (3.0 if train else 1.0)
+
+    # HBM bytes (global)
+    if train:
+        opt_mult = {"adamw": 3.0, "adafactor": 1.1}.get(cfg.optimizer, 3.0)
+        # params: read fwd + read bwd + grad write + opt read/write
+        param_traffic = n_total * p_bytes * (3.0 + opt_mult)
+        act_bytes = tokens * cfg.d_model * p_bytes * L * 2.0  # remat edges
+        hbm = param_traffic + act_bytes
+    elif shape.kind == "prefill":
+        hbm = n_active * p_bytes + tokens * cfg.d_model * p_bytes * L * 2.0
+    else:  # decode: weights + full KV cache read per token
+        kvb = 0.0
+        if cfg.num_kv_heads:
+            ctx = min(S, cfg.sliding_window or S)
+            kv_bytes = 1.0 if "8" in (cfg.kv_cache_dtype or "") else p_bytes
+            kvb = 2.0 * B * L * ctx * cfg.num_kv_heads * cfg.hd * kv_bytes
+        if cfg.family in ("ssm", "hybrid"):
+            din = cfg.din
+            Hs = din // cfg.ssm_head_dim
+            kvb += B * L * Hs * cfg.ssm_head_dim * cfg.ssm_state * 4.0 * 2
+        hbm = n_active * p_bytes + kvb
+    return {
+        "flops_model": flops_model,
+        "flops_exec": flops_exec,
+        "hbm_bytes": hbm,
+        "tokens": tokens,
+        "n_active": n_active,
+        "n_total": n_total,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens.
+    Decode counts one token per sequence."""
+    tokens = (shape.batch * shape.seq if shape.kind != "decode"
+              else shape.batch)
+    n = param_count(cfg, active_only=True)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def param_count(cfg, active_only: bool = False) -> float:
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab_padded
+    L = cfg.num_layers
+    n = V * D                           # lm_head matmul (embed is a gather)
+    if cfg.family in ("ssm",):
+        din, N = cfg.din, cfg.ssm_state
+        H = din // cfg.ssm_head_dim
+        per = D * (2 * din + 2 * N + H) + din * D
+        return n + L * per
+    hd, Hh, KH = cfg.hd, cfg.num_heads, cfg.num_kv_heads
+    attn = D * Hh * hd + 2 * D * KH * hd + Hh * hd * D
+    if cfg.family == "moe":
+        Fm = cfg.moe_d_ff or F
+        e = cfg.top_k if active_only else cfg.num_experts
+        ffn = 3 * D * Fm * e + D * cfg.num_experts  # experts + router
+    elif cfg.mlp == "gelu":
+        ffn = 2 * D * F
+    else:
+        ffn = 3 * D * F
+    per = attn + ffn
+    if cfg.family == "hybrid":
+        din, N = cfg.din, cfg.ssm_state
+        H = din // cfg.ssm_head_dim
+        per += D * (2 * din + 2 * N + H) + din * D
+    total = n + L * per
+    if cfg.is_encoder_decoder:
+        total += cfg.encoder_layers * (attn + ffn) + L * (attn)  # cross attn
+    return total

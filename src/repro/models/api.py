@@ -1,0 +1,58 @@
+"""Unified model API: build_model(cfg) → Model(init, forward, loss,
+prefill, decode_step). Family dispatch:
+  dense, vlm      → transformer (vlm consumes stubbed patch embeds)
+  moe             → moe
+  ssm             → mamba2
+  hybrid          → hymba
+  audio           → whisper (enc-dec; stubbed frame embeds)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from . import hymba, mamba2, moe, transformer, whisper
+
+_FAMILY = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": moe,
+    "ssm": mamba2,
+    "hybrid": hymba,
+    "audio": whisper,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable          # (rng) -> params
+    forward: Callable       # (params, batch) -> logits
+    loss: Callable          # (params, batch) -> scalar
+    prefill: Callable       # (params, batch) -> (cache, last_logits)
+    decode_step: Callable   # (params, cache, token, length) -> (logits, cache)
+
+    def param_specs(self):
+        """ShapeDtypeStruct pytree of params (no allocation)."""
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+
+def build_model(cfg) -> Model:
+    mod = _FAMILY[cfg.family]
+    return Model(
+        cfg=cfg,
+        init=lambda rng: mod.init_params(cfg, rng),
+        forward=lambda params, batch: _fwd(mod, cfg, params, batch),
+        loss=lambda params, batch: mod.loss_fn(cfg, params, batch),
+        prefill=lambda params, batch: mod.prefill(cfg, params, batch),
+        decode_step=lambda params, cache, token, length:
+            mod.decode_step(cfg, params, cache, token, length),
+    )
+
+
+def _fwd(mod, cfg, params, batch):
+    out = mod.forward(cfg, params, batch)
+    # moe.forward returns (logits, aux)
+    return out[0] if isinstance(out, tuple) else out

@@ -1,0 +1,379 @@
+"""Shared model building blocks (pure functions over param pytrees).
+
+Conventions:
+  * params are nested dicts of jnp arrays; layer-stacked leaves carry a
+    leading L axis and are consumed via jax.lax.scan (keeps HLO size and
+    compile time flat in depth — essential for the 512-device dry-run).
+  * dtype policy: params/activations in cfg.dtype (bf16 default), softmax
+    and reductions in f32.
+  * attention uses an online-softmax blockwise implementation (pure jnp
+    scan — the same math as the Pallas flash kernel, used as its oracle
+    and as the CPU/dry-run path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sharding constraints (no-ops outside a mesh context)
+# ---------------------------------------------------------------------------
+
+def _context_mesh():
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint if a mesh is active and dims divide.
+    Critically, its transpose constrains the *cotangent* too — GSPMD
+    otherwise materialises unsharded logits cotangents in the backward
+    (observed +28 GB/chip on the 256-chip mesh)."""
+    mesh = _context_mesh()
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed = []
+    for d, ax in enumerate(spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in sizes)
+        n = int(np.prod([sizes[a] for a in axes])) if axes else 1
+        if axes and x.shape[d] % n == 0 and x.shape[d] >= n:
+            fixed.append(axes if len(axes) > 1 else axes[0])
+        else:
+            fixed.append(None)
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*fixed)))
+
+
+def constrain_logits(x):
+    """(B, S, V) or (B, 1, V): batch over ("pod","data"), vocab on model."""
+    return constrain(x, ("pod", "data"), None, "model")
+
+
+def constrain_act(x):
+    """(B, S, D): batch over ("pod","data")."""
+    return constrain(x, ("pod", "data"), *([None] * (x.ndim - 1)))
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else (1.0 / np.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, v, d, dtype):
+    return (jax.random.normal(key, (v, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, gamma, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * gamma
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma + beta
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard / partial a.k.a. chatglm "2d" / none)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, base=10000.0, rotary_dim=None):
+    rd = rotary_dim or head_dim
+    inv = 1.0 / (base ** (np.arange(0, rd, 2, dtype=np.float32) / rd))
+    return jnp.asarray(inv)  # (rd/2,)
+
+
+def apply_rope(x, positions, inv_freq, rotary_dim=None):
+    """x: (..., S, H, hd); positions: (..., S) int32. Rotates the first
+    rotary_dim dims (partial rotary = chatglm3's 2D RoPE on half dims)."""
+    hd = x.shape[-1]
+    rd = rotary_dim or hd
+    ang = positions[..., :, None].astype(jnp.float32) * inv_freq  # (...,S,rd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    xr = x[..., :rd].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    rot = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    if rd == hd:
+        return rot
+    return jnp.concatenate([rot, x[..., rd:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# blockwise causal attention (online softmax) — jnp flash
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    b, s, kh, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, n_rep, hd)) \
+        .reshape(b, s, kh * n_rep, hd)
+
+
+def blockwise_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                        q_block=512, kv_block=512):
+    """q,k,v: (B, S, H, hd) / (B, S, KH, hd) with H % KH == 0.
+    Online-softmax over KV blocks: O(S·block) memory instead of O(S²).
+    Sliding ``window`` (in tokens) skips KV blocks wholly outside range.
+
+    Uses a flash-attention custom_vjp: the forward saves only (q,k,v,out,
+    lse); the backward re-derives each P block inside its own scan step.
+    Plain autodiff (even under jax.checkpoint) stacks every (q_block x
+    kv_block) P matrix across BOTH block loops — O(S^2) residuals,
+    observed +16 GB/chip on the 4k train cells of the 256-chip dry-run.
+    """
+    h = q.shape[2]
+    kh = k.shape[2]
+    k = _repeat_kv(k, h // kh)   # autodiff of the repeat sums dk over groups
+    v = _repeat_kv(v, h // kh)
+    return _flash(q, k, v, causal, window, q_block, kv_block)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, window, q_block, kv_block):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block)
+    return out
+
+
+def _block_mask(qi_ids, kj_ids, causal, window, sq, skv):
+    mask = (kj_ids < skv) & (qi_ids < sq)
+    if causal:
+        mask &= kj_ids <= qi_ids
+    if window is not None:
+        mask &= kj_ids > qi_ids - window
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block):
+    b, sq, h, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    nq = -(-sq // q_block)
+    skv = k.shape[1]
+    nk = -(-skv // kv_block)
+    pq, pk = nq * q_block - sq, nk * kv_block - skv
+    qb = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) \
+        .reshape(b, nq, q_block, h, hd).transpose(1, 0, 3, 2, 4)
+    kb = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) \
+        .reshape(b, nk, kv_block, h, hd).transpose(1, 0, 3, 2, 4)
+    vb = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) \
+        .reshape(b, nk, kv_block, h, hd).transpose(1, 0, 3, 2, 4)
+    q_ids = jnp.arange(nq * q_block).reshape(nq, q_block)
+    k_ids = jnp.arange(nk * kv_block).reshape(nk, kv_block)
+
+    def per_qblock(qi, qblk):
+        m0 = jnp.full((b, h, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q_block), jnp.float32)
+        o0 = jnp.zeros((b, h, q_block, hd), jnp.float32)
+
+        def body(carry, inp):
+            m, l, o = carry
+            kj, kblk, vblk = inp
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            mask = _block_mask(q_ids[qi][:, None], k_ids[kj][None, :],
+                               causal, window, sq, skv)
+            s = jnp.where(mask[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(mask[None, None], jnp.exp(s - m_safe[..., None]),
+                          0.0)
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, o_new), None
+
+        (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0),
+                                    (jnp.arange(nk), kb, vb))
+        o = o / jnp.maximum(l[..., None], 1e-20)
+        lse = jnp.where(l > 0, jnp.where(jnp.isfinite(m), m, 0.0)
+                        + jnp.log(jnp.maximum(l, 1e-20)), -jnp.inf)
+        return o, lse
+
+    out, lse = jax.lax.map(lambda t: per_qblock(t[0], t[1]),
+                           (jnp.arange(nq), qb))
+    # out: (nq, B, H, q_block, hd); lse: (nq, B, H, q_block)
+    o_final = out.transpose(1, 0, 3, 2, 4).reshape(b, nq * q_block, h, hd)
+    return o_final[:, :sq].astype(q.dtype), lse
+
+
+def _flash_fwd(q, k, v, causal, window, q_block, kv_block):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_block, kv_block, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    nq = -(-sq // q_block)
+    nk = -(-skv // kv_block)
+    pq, pk = nq * q_block - sq, nk * kv_block - skv
+
+    def blockq(x):
+        return jnp.pad(x, ((0, 0), (0, pq), (0, 0), (0, 0))) \
+            .reshape(b, nq, q_block, h, hd).transpose(1, 0, 3, 2, 4)
+
+    def blockk(x):
+        return jnp.pad(x, ((0, 0), (0, pk), (0, 0), (0, 0))) \
+            .reshape(b, nk, kv_block, h, hd).transpose(1, 0, 3, 2, 4)
+
+    qb, dob, ob = blockq(q), blockq(dout), blockq(out)
+    kb, vb = blockk(k), blockk(v)
+    q_ids = jnp.arange(nq * q_block).reshape(nq, q_block)
+    k_ids = jnp.arange(nk * kv_block).reshape(nk, kv_block)
+    # D_i = rowsum(dout * out)
+    Db = jnp.sum(dob.astype(jnp.float32) * ob.astype(jnp.float32), axis=-1)
+    f32 = jnp.float32
+
+    # Nested scans: one (q_block x kv_block) panel live at a time.
+    # A single kv scan over ALL q blocks holds (nq,B,H,qb,kb) panels —
+    # that is the full S x kv_block stripe (observed +17 GB/chip on the
+    # hymba train cell). Operands stay bf16; f32 only via accumulation.
+    def kv_body(dq_acc, kv_inp):
+        kj, kblk, vblk = kv_inp
+
+        def q_body(carry, q_inp):
+            dk_j, dv_j = carry
+            qi, qblk, doblk, D_i, lse_i = q_inp
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk,
+                           preferred_element_type=f32) * scale
+            mask = _block_mask(q_ids[qi][:, None], k_ids[kj][None, :],
+                               causal, window, sq, skv)
+            p = jnp.where(mask[None, None],
+                          jnp.exp(s - lse_i[..., None]), 0.0)
+            pb = p.astype(qblk.dtype)
+            dv_j = dv_j + jnp.einsum("bhqk,bhqd->bhkd", pb, doblk,
+                                     preferred_element_type=f32)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", doblk, vblk,
+                            preferred_element_type=f32)
+            ds = p * (dp - D_i[..., None]) * scale
+            dsb = ds.astype(qblk.dtype)
+            dq_i = jnp.einsum("bhqk,bhkd->bhqd", dsb, kblk,
+                              preferred_element_type=f32)
+            dk_j = dk_j + jnp.einsum("bhqk,bhqd->bhkd", dsb, qblk,
+                                     preferred_element_type=f32)
+            return (dk_j, dv_j), dq_i
+
+        zero_kv = jnp.zeros((b, h, kv_block, hd), f32)
+        (dk_j, dv_j), dq_contrib = jax.lax.scan(
+            q_body, (zero_kv, zero_kv),
+            (jnp.arange(nq), qb, dob, Db, lse))
+        return dq_acc + dq_contrib, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((nq, b, h, q_block, hd), f32)
+    dq, (dk, dv) = jax.lax.scan(kv_body, dq0, (jnp.arange(nk), kb, vb))
+
+    def unblockq(x):
+        return x.transpose(1, 0, 3, 2, 4).reshape(b, nq * q_block, h, hd)[
+            :, :sq]
+
+    def unblockk(x):
+        return x.transpose(1, 0, 3, 2, 4).reshape(b, nk * kv_block, h, hd)[
+            :, :skv]
+
+    return (unblockq(dq).astype(q.dtype), unblockk(dk).astype(k.dtype),
+            unblockk(dv).astype(v.dtype))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+
+def decode_attention(q, k_cache, v_cache, length, *, window=None):
+    """Single-token attention against a cache.
+    q: (B, 1, H, hd); caches: (B, S_max, KH, hd); length: current length
+    (int32 scalar or (B,) vector) — positions >= length are masked.
+
+    GQA is computed with grouped einsums directly against the (KH)-headed
+    cache: materialising the H-repeated (or f32-upcast) cache costs
+    2 x (H/KH) x cache bytes of temp — observed +25 GB/chip on the
+    kimi decode_32k cell. preferred_element_type keeps the f32 accumulate
+    without an f32 copy of the cache."""
+    b, one, h, hd = q.shape
+    kh = k_cache.shape[2]
+    rep = h // kh
+    qg = q.reshape(b, one, kh, rep, hd)
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bqkrd,bskd->bkrqs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(k_cache.shape[1])
+    ln = jnp.asarray(length)
+    ln = ln[:, None, None, None, None] if ln.ndim else ln
+    mask = pos[None, None, None, None, :] < ln
+    if window is not None:
+        mask &= pos[None, None, None, None, :] >= (ln - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrqs,bskd->bqkrd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, one, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def gated_mlp(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    h = jax.nn.gelu(x @ w_up + b_up)
+    return h @ w_down + b_down
+
+
+def cross_entropy(logits, labels, vocab_real: Optional[int] = None):
+    """Mean CE in f32; labels < 0 masked; vocab padding masked.
+
+    Sharding-preserving formulation: the label log-prob is extracted with
+    a masked one-hot reduction (elementwise compare + sum) instead of
+    take_along_axis — a vocab-dim gather would force GSPMD to all-gather
+    the full-vocab logits on every chip (observed: +13 GB/chip temp on a
+    256-way mesh). Elementwise + reduce keeps the vocab axis sharded.
+    """
+    lf = logits.astype(jnp.float32)
+    vid = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    if vocab_real is not None and vocab_real < lf.shape[-1]:
+        lf = jnp.where(vid < vocab_real, lf, -1e30)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.sum(jnp.where(vid == jnp.maximum(labels, 0)[..., None], lf, 0.0),
+                 axis=-1)
+    mask = labels >= 0
+    nll = (lse - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

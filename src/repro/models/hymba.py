@@ -1,0 +1,190 @@
+"""Hymba — hybrid-head architecture (arXiv:2411.13676).
+
+Each layer runs attention heads and SSM (mamba2-style) heads in
+*parallel* on the same normed input and fuses their outputs (here: mean
+of the two projected streams — the paper fuses with learned per-head
+scaling; documented simplification). Attention is sliding-window (the
+paper keeps a few global layers; we use SWA everywhere, which is what
+makes the long_500k cell sub-quadratic), SSM path is a conv-free SSD.
+
+Decode state: right-aligned sliding KV window (pre-rotated keys) + SSM
+state per layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as c
+from . import mamba2
+from . import transformer as tfm
+
+
+def _dims(cfg):
+    din = cfg.din
+    return din, din // cfg.ssm_head_dim, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_layer_params(cfg, key):
+    dt = c.dtype_of(cfg)
+    D = cfg.d_model
+    din, H, P, N = _dims(cfg)
+    p = tfm.init_layer_params(cfg, key)   # attn + mlp + norms
+    ks = jax.random.split(jax.random.fold_in(key, 29), 3)
+    p.update({
+        "ssm_in": c.dense_init(ks[0], D, 2 * din + 2 * N + H, dt),
+        "ssm_out": c.dense_init(ks[1], din, D, dt),
+        "ssm_norm_g": jnp.ones((din,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "Dd": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+    })
+    return p
+
+
+def init_params(cfg, key):
+    p = tfm.init_params(cfg, key)
+    kl = jax.random.fold_in(key, 5)
+    p["layers"] = jax.vmap(lambda k: init_layer_params(cfg, k))(
+        jax.random.split(kl, cfg.num_layers))
+    return p
+
+
+def _ssm_branch(cfg, lp, h, h0=None, return_state=False):
+    din, H, P, N = _dims(cfg)
+    B, S, _ = h.shape
+    zxbcdt = h @ lp["ssm_in"]
+    z = zxbcdt[..., :din]
+    xBC = jax.nn.silu(zxbcdt[..., din:2 * din + 2 * N])
+    dt_raw = zxbcdt[..., 2 * din + 2 * N:]
+    xs = xBC[..., :din].reshape(B, S, H, P)
+    Bm = xBC[..., din:din + N]
+    Cm = xBC[..., din + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    y, h_fin = mamba2.ssd_chunked(cfg, xs, Bm, Cm, dt, A, lp["Dd"], h0)
+    y = y.reshape(B, S, din).astype(h.dtype)
+    y = c.rmsnorm(y, lp["ssm_norm_g"], cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ lp["ssm_out"]
+    return (out, h_fin) if return_state else out
+
+
+def make_layer_fn(cfg, collect_state: bool):
+    inv_freq = c.rope_freqs(cfg.hd, cfg.rope_base)
+    W = cfg.sliding_window
+
+    def layer(x, lp, positions):
+        h = tfm._norm(cfg, x, lp, "ln1")
+        q, k, v = tfm._qkv(cfg, lp, h, positions, inv_freq)
+        attn = c.blockwise_attention(q, k, v, causal=True, window=W)
+        B, S = x.shape[:2]
+        attn_out = attn.reshape(B, S, -1) @ lp["wo"]
+        if collect_state:
+            ssm_out, h_fin = _ssm_branch(cfg, lp, h, return_state=True)
+        else:
+            ssm_out = _ssm_branch(cfg, lp, h)
+        x = x + 0.5 * (attn_out + ssm_out)     # parallel-head fusion
+        h2 = tfm._norm(cfg, x, lp, "ln2")
+        x = x + tfm._mlp(cfg, lp, h2)
+        if collect_state:
+            kw = k[:, -W:] if S >= W else jnp.pad(
+                k, ((0, 0), (W - S, 0), (0, 0), (0, 0)))
+            vw = v[:, -W:] if S >= W else jnp.pad(
+                v, ((0, 0), (W - S, 0), (0, 0), (0, 0)))
+            return x, (kw, vw, h_fin)
+        return x, None
+
+    return layer
+
+
+def backbone(cfg, params, x, positions, collect_state=False):
+    layer = make_layer_fn(cfg, collect_state)
+
+    def body(xc, lp):
+        return layer(xc, lp, positions)
+
+    f = jax.checkpoint(body) if cfg.remat else body
+    x, st = jax.lax.scan(f, x, params["layers"])
+    return tfm._norm(cfg, x, params, "ln_f"), st
+
+
+def forward(cfg, params, batch):
+    x = params["embed"][batch["tokens"]]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, _ = backbone(cfg, params, x, positions)
+    return c.constrain_logits(x @ params["lm_head"])
+
+
+def loss_fn(cfg, params, batch):
+    return c.cross_entropy(forward(cfg, params, batch), batch["labels"],
+                           cfg.vocab_size)
+
+
+def prefill(cfg, params, batch):
+    x = params["embed"][batch["tokens"]]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, (k, v, h) = backbone(cfg, params, x, positions, collect_state=True)
+    return ({"k": k, "v": v, "ssm_state": h},
+            c.constrain_logits(x[:, -1:] @ params["lm_head"]))
+
+
+def decode_step(cfg, params, cache, token, length):
+    """Sliding-window KV (right-aligned, newest last) + O(1) SSM step."""
+    din, H, P, N = _dims(cfg)
+    inv_freq = c.rope_freqs(cfg.hd, cfg.rope_base)
+    W = cfg.sliding_window
+    x = params["embed"][token]
+    B = x.shape[0]
+    pos = jnp.full((B, 1), length, jnp.int32)
+
+    def body(xc, scans):
+        lp, kc, vc, h = scans
+        hn = tfm._norm(cfg, xc, lp, "ln1")
+        q, k, v = tfm._qkv(cfg, lp, hn, pos, inv_freq)
+        kc = jnp.concatenate([kc[:, 1:], k.astype(kc.dtype)], axis=1)
+        vc = jnp.concatenate([vc[:, 1:], v.astype(vc.dtype)], axis=1)
+        # entries at index i hold absolute position length-(W-1-i); valid >=0
+        idx = jnp.arange(W)
+        valid = idx >= (W - 1 - length)
+        kk = c._repeat_kv(kc, cfg.num_heads // cfg.num_kv_heads)
+        vv = c._repeat_kv(vc, cfg.num_heads // cfg.num_kv_heads)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                       kk.astype(jnp.float32)) / np.sqrt(cfg.hd)
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, axis=-1),
+                          vv.astype(jnp.float32)).astype(xc.dtype)
+        attn_out = attn.reshape(B, 1, -1) @ lp["wo"]
+        # SSM single step (conv-free)
+        zxbcdt = hn @ lp["ssm_in"]
+        z = zxbcdt[..., :din]
+        xBC = jax.nn.silu(zxbcdt[..., din:2 * din + 2 * N])
+        dt_raw = zxbcdt[..., 2 * din + 2 * N:]
+        xs = xBC[..., :din].reshape(B, H, P)
+        Bm = xBC[:, 0, din:din + N]
+        Cm = xBC[:, 0, din + N:]
+        dtv = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                              + lp["dt_bias"])
+        A = -jnp.exp(lp["A_log"])
+        dA = jnp.exp(dtv * A)
+        h = h * dA[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtv, Bm.astype(jnp.float32),
+            xs.astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h) \
+            + lp["Dd"][None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(B, 1, din).astype(xc.dtype)
+        y = c.rmsnorm(y, lp["ssm_norm_g"], cfg.norm_eps) * jax.nn.silu(z)
+        ssm_out = y @ lp["ssm_out"]
+        xc = xc + 0.5 * (attn_out + ssm_out)
+        h2 = tfm._norm(cfg, xc, lp, "ln2")
+        xc = xc + tfm._mlp(cfg, lp, h2)
+        return xc, (kc, vc, h)
+
+    x, (k_new, v_new, h_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"],
+                  cache["ssm_state"]))
+    x = tfm._norm(cfg, x, params, "ln_f")
+    return c.constrain_logits(x @ params["lm_head"]), {"k": k_new, "v": v_new,
+                                   "ssm_state": h_new}

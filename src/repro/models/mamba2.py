@@ -1,0 +1,222 @@
+"""Mamba-2 (SSD, state-space duality — arXiv:2405.21060).
+
+Chunked SSD forward: the sequence is split into chunks; within a chunk
+the quadratic dual form runs on the MXU, between chunks the SSM state
+(B, H, P, N) is passed through a lax.scan — O(S) memory, O(S·Q) compute.
+Decode is the O(1) recurrent step. Attention-free (no KV cache); the
+long_500k cell runs on this family.
+
+Shapes: d_inner = expansion (cfg.din), P = ssm_head_dim, H = din/P heads,
+N = ssm_state. B/C are shared across heads (ngroups=1, as in the paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as c
+
+CONV_K = 4
+CHUNK = 128
+
+
+def _dims(cfg):
+    din = cfg.din
+    H = din // cfg.ssm_head_dim
+    return din, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_layer_params(cfg, key):
+    dt = c.dtype_of(cfg)
+    D = cfg.d_model
+    din, H, P, N = _dims(cfg)
+    conv_dim = din + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": c.dense_init(ks[0], D, 2 * din + 2 * N + H, dt),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, conv_dim)) * 0.2
+                   ).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_g": jnp.ones((din,), dt),
+        "ln_g": jnp.ones((D,), dt),
+        "out_proj": c.dense_init(ks[2], din, D, dt),
+    }
+
+
+def init_params(cfg, key):
+    dt = c.dtype_of(cfg)
+    k1, k2, k3, kl = jax.random.split(key, 4)
+    return {
+        "embed": c.embed_init(k1, cfg.vocab_padded, cfg.d_model, dt),
+        "lm_head": c.dense_init(k2, cfg.d_model, cfg.vocab_padded, dt),
+        "ln_f_g": jnp.ones((cfg.d_model,), dt),
+        "layers": jax.vmap(lambda k: init_layer_params(cfg, k))(
+            jax.random.split(kl, cfg.num_layers)),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    din, H, P, N = _dims(cfg)
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din:2 * din + 2 * N]
+    dt_raw = zxbcdt[..., 2 * din + 2 * N:]
+    return z, xBC, dt_raw
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, kernel CONV_K. xBC: (B, S, C)."""
+    pads = jnp.pad(xBC, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + xBC.shape[1]] * w[i] for i in range(CONV_K))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(cfg, x, Bm, Cm, dt, A, D, h0=None):
+    """Chunked SSD scan.
+    x: (B,S,H,P); Bm,Cm: (B,S,N); dt: (B,S,H) (post-softplus); A: (H,)<0.
+    Returns y (B,S,H,P), final state (B,H,P,N)."""
+    b, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(CHUNK, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    xc = x.reshape(b, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    Bc = Bm.reshape(b, nc, Q, N).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(b, nc, Q, N).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(b, nc, Q, H).transpose(1, 0, 2, 3)
+    h_init = (jnp.zeros((b, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def chunk_body(h, inp):
+        xq, Bq, Cq, dtq = inp                     # (B,Q,...)
+        dA = dtq * A                              # (B,Q,H) negative
+        a_cum = jnp.cumsum(dA, axis=1)            # (B,Q,H)
+        # intra-chunk dual (quadratic) form
+        G = jnp.einsum("bqn,bkn->bqk", Cq.astype(jnp.float32),
+                       Bq.astype(jnp.float32))    # (B,Q,Q)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        # mask the exponent BEFORE exp: the i>j half would overflow to inf
+        # and poison the backward via inf*0=NaN cotangents
+        delta = a_cum[:, :, None, :] - a_cum[:, None, :, :]
+        delta = jnp.where(mask[None, :, :, None], delta, -1e30)
+        decay = jnp.exp(delta)
+        M = G[..., None] * decay * dtq[:, None, :, :]  # (B,Q,K,H)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", M,
+                             xq.astype(jnp.float32))
+        # inter-chunk from carried state
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", Cq.astype(jnp.float32), h) \
+            * jnp.exp(a_cum)[..., None]
+        # state update
+        w = dtq * jnp.exp(a_cum[:, -1:, :] - a_cum)      # (B,Q,H)
+        h_new = h * jnp.exp(a_cum[:, -1])[:, :, None, None] \
+            + jnp.einsum("bkh,bkn,bkhp->bhpn", w,
+                         Bq.astype(jnp.float32), xq.astype(jnp.float32))
+        return h_new, (y_intra + y_inter)
+
+    h_fin, ys = jax.lax.scan(chunk_body, h_init, (xc, Bc, Cc, dtc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * Q, H, P)[:, :S]
+    y = y + D[None, None, :, None] * x[:, :S].astype(jnp.float32)
+    return y, h_fin
+
+
+def layer_forward(cfg, lp, x, h0=None, conv0=None, return_state=False):
+    """One mamba2 block. x: (B,S,D)."""
+    din, H, P, N = _dims(cfg)
+    B, S, D = x.shape
+    hid = c.rmsnorm(x, lp["ln_g"], cfg.norm_eps)
+    zxbcdt = hid @ lp["in_proj"]
+    z, xBC_raw, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC_raw, lp["conv_w"], lp["conv_b"])
+    xs = xBC[..., :din].reshape(B, S, H, P)
+    Bm = xBC[..., din:din + N]
+    Cm = xBC[..., din + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    y, h_fin = ssd_chunked(cfg, xs, Bm, Cm, dt, A, lp["D"], h0)
+    y = y.reshape(B, S, din).astype(x.dtype)
+    y = c.rmsnorm(y, lp["norm_g"], cfg.norm_eps) * jax.nn.silu(z)
+    out = x + y @ lp["out_proj"]
+    if return_state:
+        tail = jnp.zeros((B, CONV_K, din + 2 * N), x.dtype)
+        take = min(CONV_K, S)
+        tail = tail.at[:, -take:].set(xBC_raw[:, -take:])
+        return out, h_fin, tail
+    return out
+
+
+def backbone(cfg, params, x, collect_state=False):
+    def body(xc, lp):
+        if collect_state:
+            out, h, conv = layer_forward(cfg, lp, xc, return_state=True)
+            return out, (h, conv)
+        return layer_forward(cfg, lp, xc), None
+
+    f = jax.checkpoint(body) if cfg.remat else body
+    x, states = jax.lax.scan(f, x, params["layers"])
+    x = c.rmsnorm(x, params["ln_f_g"], cfg.norm_eps)
+    return x, states
+
+
+def forward(cfg, params, batch):
+    x = c.constrain_act(params["embed"][batch["tokens"]])
+    x, _ = backbone(cfg, params, x)
+    return c.constrain_logits(x @ params["lm_head"])
+
+
+def loss_fn(cfg, params, batch):
+    return c.cross_entropy(forward(cfg, params, batch), batch["labels"],
+                           cfg.vocab_size)
+
+
+def prefill(cfg, params, batch):
+    x = params["embed"][batch["tokens"]]
+    x, (h, conv) = backbone(cfg, params, x, collect_state=True)
+    logits = c.constrain_logits(x[:, -1:] @ params["lm_head"])
+    return {"ssm_state": h, "conv_state": conv}, logits
+
+
+def decode_step(cfg, params, cache, token, length):
+    """O(1) recurrent step. cache: ssm_state (L,B,H,P,N),
+    conv_state (L,B,CONV_K,conv_dim) holding the last raw xBC inputs."""
+    del length
+    din, H, P, N = _dims(cfg)
+    x = params["embed"][token]                  # (B,1,D)
+    B = x.shape[0]
+
+    def body(xc, scans):
+        lp, h, conv = scans
+        hid = c.rmsnorm(xc, lp["ln_g"], cfg.norm_eps)
+        zxbcdt = hid @ lp["in_proj"]
+        z, xBC_raw, dt_raw = _split_proj(cfg, zxbcdt)
+        conv = jnp.concatenate([conv[:, 1:], xBC_raw], axis=1)
+        xBC = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv, lp["conv_w"])
+                          + lp["conv_b"])[:, None]
+        xs = xBC[..., :din].reshape(B, H, P)
+        Bm = xBC[..., din:din + N][:, 0]
+        Cm = xBC[..., din + N:][:, 0]
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                             + lp["dt_bias"])   # (B,H)
+        A = -jnp.exp(lp["A_log"])
+        dA = jnp.exp(dt * A)                    # (B,H)
+        h = h * dA[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32),
+            xs.astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h) \
+            + lp["D"][None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(B, 1, din).astype(xc.dtype)
+        y = c.rmsnorm(y, lp["norm_g"], cfg.norm_eps) * jax.nn.silu(z)
+        return xc + y @ lp["out_proj"], (h, conv)
+
+    x, (h_new, conv_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["ssm_state"], cache["conv_state"]))
+    x = c.rmsnorm(x, params["ln_f_g"], cfg.norm_eps)
+    return c.constrain_logits(x @ params["lm_head"]), {"ssm_state": h_new,
+                                   "conv_state": conv_new}

@@ -1,0 +1,327 @@
+"""Mixture-of-Experts transformer (kimi-k2 / granite-moe).
+
+Attention blocks are shared with models.transformer; the FFN is a top-k
+routed expert layer with sort-based (one-hot-free) dispatch.
+
+Two dispatch modes:
+  * "dense"     — uniform capacity per expert (GShard/Switch style).
+  * "biglittle" — the paper's heterogeneous-pipeline idea applied to
+    experts: expert load under top-k routing is power-law (same skew the
+    paper exploits in graph partitions). Experts are offline-relabelled
+    by historical load (the DBG analogue), the first n_hot experts get
+    Little treatment (large capacity, long regular batches) and the tail
+    gets Big treatment (small capacity, compacted batch), cutting padded
+    FLOPs/memory vs. provisioning every expert for the worst case. The
+    split (n_hot, C_hot, C_cold) comes from models.moe_schedule — the
+    model-guided scheduling analogue.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as c
+from . import transformer as tfm
+
+
+def init_layer_params(cfg, key):
+    dt = c.dtype_of(cfg)
+    D, E, F = cfg.d_model, cfg.num_experts_padded, cfg.moe_d_ff or cfg.d_ff
+    p = tfm.init_layer_params(cfg, key)
+    for nm in ("w_gate", "w_up", "w_down", "b_up", "b_down"):
+        p.pop(nm, None)
+    ks = jax.random.split(jax.random.fold_in(key, 17), 4)
+    p["router"] = c.dense_init(ks[0], D, E, jnp.float32)
+    p["we_gate"] = c.dense_init(ks[1], D, F, dt) * jnp.ones((E, 1, 1), dt)
+    p["we_up"] = c.dense_init(ks[2], D, F, dt) * jnp.ones((E, 1, 1), dt)
+    p["we_down"] = c.dense_init(ks[3], F, D, dt) * jnp.ones((E, 1, 1), dt)
+    return p
+
+
+def init_params(cfg, key):
+    p = tfm.init_params(cfg, key)
+    kl = jax.random.fold_in(key, 3)
+    p["layers"] = jax.vmap(lambda k: init_layer_params(cfg, k))(
+        jax.random.split(kl, cfg.num_layers))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# sort-based dispatch
+# ---------------------------------------------------------------------------
+
+def _ranks_in_expert(sorted_e):
+    """rank of each sorted element within its expert segment."""
+    n = sorted_e.shape[0]
+    ar = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool),
+                                sorted_e[1:] != sorted_e[:-1]])
+    start = jnp.where(is_start, ar, 0)
+    start = jax.lax.associative_scan(jnp.maximum, start)
+    return ar - start
+
+
+def _route(x, router_w, top_k, e_real=None):
+    logits = (x.astype(jnp.float32) @ router_w)          # (T, E_pad)
+    if e_real is not None and e_real < router_w.shape[1]:
+        eid = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(eid < e_real, logits, -1e30)
+    gw, gi = jax.lax.top_k(logits, top_k)
+    gw = jax.nn.softmax(gw, axis=-1)
+    # aux load-balance loss (Switch): E * mean(frac_tokens * frac_router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    E = router_w.shape[1]
+    frac_router = probs.mean(axis=0)
+    hard = jnp.zeros((E,)).at[gi.reshape(-1)].add(1.0) / gi.size
+    aux = E * jnp.sum(hard * frac_router)
+    return gw, gi, aux
+
+
+def _expert_ffn(buf, wg, wu, wd):
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) \
+        * jnp.einsum("ecd,edf->ecf", buf, wu)
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _dispatch_group(x, tok_id, sorted_e, rank, gatew, group_lo, group_hi,
+                    cap, wg, wu, wd):
+    """Dispatch+compute+combine for experts in [group_lo, group_hi) with
+    uniform capacity ``cap``. The weight slices wg/wu/wd cover EXACTLY the
+    group (pre-sliced — under shard_map they are the local shard).
+    Returns (T, D) contribution."""
+    T, D = x.shape
+    n_exp = group_hi - group_lo
+    in_group = (sorted_e >= group_lo) & (sorted_e < group_hi)
+    keep = in_group & (rank < cap)
+    slot = jnp.where(keep, (sorted_e - group_lo) * cap + rank, n_exp * cap)
+    buf = jnp.zeros((n_exp * cap, D), x.dtype).at[slot].set(
+        x[tok_id], mode="drop")
+    y = _expert_ffn(buf.reshape(n_exp, cap, D), wg, wu, wd) \
+        .reshape(n_exp * cap, D)
+    gathered = jnp.where(keep[:, None], y[jnp.minimum(slot, n_exp * cap - 1)],
+                         0.0)
+    return jnp.zeros((T, D), x.dtype).at[tok_id].add(
+        gathered * gatew[:, None], mode="drop")
+
+
+def _moe_ffn_tokens(cfg, router, wg, wu, wd, x, r, e_per, n_model,
+                    capacity_factor):
+    """Dispatch a (T, D) token block against this rank's experts.
+
+    Storage order is the offline load-based relabel (the DBG analogue)
+    INTERLEAVED across ranks: rank r's local expert j has global load
+    rank j*n_model + r, so with n_hot a multiple of n_model every rank
+    owns exactly h_per = n_hot/n_model hot experts — a static, identical
+    (hot block, cold block) buffer layout on every rank:
+
+        [ h_per experts x C_hot | (e_per - h_per) experts x C_cold ]
+
+    Hot experts ("Little": few, long regular batches) and cold experts
+    ("Big": many, compact batches) each get their own einsum — the
+    paper's two pipeline types at the expert level.
+    """
+    T, D = x.shape
+    E, K = cfg.num_experts_padded, cfg.top_k
+    gw, gi, aux = _route(x, router, K, cfg.num_experts)
+    flat_e = gi.reshape(-1).astype(jnp.int32)            # (T*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    rank = _ranks_in_expert(sorted_e)
+    tok_id = (order // K).astype(jnp.int32)
+    gatew = gw.reshape(-1)[order].astype(x.dtype)
+
+    if cfg.moe_dispatch == "biglittle":
+        from .moe_schedule import biglittle_split
+        n_hot, c_hot, c_cold = biglittle_split(
+            E, K, T, capacity_factor, round_to=n_model)
+    else:
+        n_hot, c_hot = 0, 8
+        c_cold = max(8, int(T * K / E * capacity_factor))
+    h_per = n_hot // n_model
+    e_lo = r * e_per
+    j = sorted_e - e_lo                      # local expert index
+    in_rank = (j >= 0) & (j < e_per)
+    is_hot = j < h_per
+    cap_j = jnp.where(is_hot, c_hot, c_cold)
+    off_j = jnp.where(is_hot, j * c_hot,
+                      h_per * c_hot + (j - h_per) * c_cold)
+    keep = in_rank & (rank < cap_j)
+    bufsize = h_per * c_hot + (e_per - h_per) * c_cold
+    slot = jnp.where(keep, off_j + rank, bufsize)
+    buf = jnp.zeros((bufsize, D), x.dtype).at[slot].set(
+        x[tok_id], mode="drop")
+    y = jnp.zeros((bufsize, D), x.dtype)
+    hb = h_per * c_hot
+    if h_per > 0:                            # Little: hot experts
+        y = y.at[:hb].set(_expert_ffn(
+            buf[:hb].reshape(h_per, c_hot, D),
+            wg[:h_per], wu[:h_per], wd[:h_per]).reshape(hb, D))
+    if e_per > h_per:                        # Big: cold experts
+        y = y.at[hb:].set(_expert_ffn(
+            buf[hb:].reshape(e_per - h_per, c_cold, D),
+            wg[h_per:], wu[h_per:], wd[h_per:]).reshape(bufsize - hb, D))
+    gathered = jnp.where(keep[:, None], y[jnp.minimum(slot, bufsize - 1)],
+                         0.0)
+    out = jnp.zeros((T, D), x.dtype).at[tok_id].add(
+        gathered * gatew[:, None], mode="drop")
+    return out, aux
+
+
+def _moe_ffn_tokens_fsharded(cfg, router, wg, wu, wd, x, capacity_factor):
+    """Fallback when the model axis does not divide E_pad: every rank
+    dispatches all experts, FFN dim sharded, partial outputs psum'd."""
+    return _moe_ffn_tokens(cfg, router, wg, wu, wd, x,
+                           jnp.int32(0), cfg.num_experts_padded, 1,
+                           capacity_factor)
+
+
+def moe_ffn(cfg, lp, h, capacity_factor=None):
+    """h: (B, S, D) -> (out, aux_loss).
+
+    Distribution: dispatch runs PER DATA SHARD inside shard_map (sort,
+    ranks, scatter stay local — the global-token form materialises
+    E*cap_global buffers, observed +100 GB/chip at 1M tokens). Experts
+    shard on the "model" axis (each rank computes its expert slice for
+    its local tokens, then psum over "model" — the Megatron-FFN combine;
+    no all-to-all because activations are model-replicated).
+    """
+    capacity_factor = (cfg.capacity_factor if capacity_factor is None
+                       else capacity_factor)
+    B, S, D = h.shape
+    E = cfg.num_experts_padded
+    mesh = c._context_mesh()
+    dp = tuple(a for a in ("pod", "data") if mesh and a in mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+    n_dp = int(np.prod([sizes[a] for a in dp])) if dp else 1
+    n_model = sizes.get("model", 1)
+    expert_sharded = n_model > 1 and E % n_model == 0
+    F = cfg.moe_d_ff or cfg.d_ff
+    ffn_sharded = (not expert_sharded) and n_model > 1 and F % n_model == 0
+    if mesh is None or B % max(n_dp, 1) != 0 or n_model == 1:
+        x = h.reshape(B * S, D)
+        out, aux = _moe_ffn_tokens(cfg, lp["router"], lp["we_gate"],
+                                   lp["we_up"], lp["we_down"], x,
+                                   jnp.int32(0), E, 1, capacity_factor)
+        return out.reshape(B, S, D), aux
+
+    from jax.sharding import PartitionSpec as P
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    if expert_sharded:
+        w_spec, wd_spec = P("model", None, None), P("model", None, None)
+    elif ffn_sharded:
+        w_spec, wd_spec = P(None, None, "model"), P(None, "model", None)
+    else:
+        w_spec, wd_spec = P(None, None, None), P(None, None, None)
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(dp_spec, None, None), P(None, None),
+                       w_spec, w_spec, wd_spec),
+             out_specs=(P(dp_spec, None, None), P()))
+    def inner(h_loc, router, wg, wu, wd):
+        bl, sl, _ = h_loc.shape
+        x = h_loc.reshape(bl * sl, D)
+        if expert_sharded:
+            r = jax.lax.axis_index("model")
+            out, aux = _moe_ffn_tokens(cfg, router, wg, wu, wd, x, r,
+                                       E // n_model, n_model,
+                                       capacity_factor)
+        else:
+            out, aux = _moe_ffn_tokens_fsharded(cfg, router, wg, wu, wd, x,
+                                                capacity_factor)
+        out = jax.lax.psum(out, "model")
+        if dp:
+            aux = jax.lax.pmean(aux, dp)
+        aux = jax.lax.pmean(aux, "model")
+        return out.reshape(bl, sl, D), aux
+
+    return inner(h, lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"])
+
+
+def make_layer_fn(cfg, collect_kv: bool):
+    inv_freq = c.rope_freqs(cfg.hd, cfg.rope_base,
+                            tfm._rotary_dim(cfg) or None)
+    window = cfg.sliding_window or None
+
+    def layer(carry, lp, positions):
+        x, aux_acc = carry
+        h = _n = tfm._norm(cfg, x, lp, "ln1")
+        q, k, v = tfm._qkv(cfg, lp, h, positions, inv_freq)
+        attn = c.blockwise_attention(q, k, v, causal=True, window=window)
+        B, S = x.shape[:2]
+        x = x + attn.reshape(B, S, -1) @ lp["wo"]
+        h2 = tfm._norm(cfg, x, lp, "ln2")
+        y, aux = moe_ffn(cfg, lp, h2)
+        x = x + y
+        return (x, aux_acc + aux), ((k, v) if collect_kv else None)
+
+    return layer
+
+
+def backbone(cfg, params, x, positions, collect_kv=False):
+    layer = make_layer_fn(cfg, collect_kv)
+
+    def body(carry, lp):
+        return layer(carry, lp, positions)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), kv = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                params["layers"])
+    x = tfm._norm(cfg, x, params, "ln_f")
+    return x, aux, kv
+
+
+def forward(cfg, params, batch):
+    x = tfm.embed_input(cfg, params, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, aux, _ = backbone(cfg, params, x, positions)
+    return c.constrain_logits(x @ params["lm_head"]), aux
+
+
+def loss_fn(cfg, params, batch, aux_weight=0.01):
+    logits, aux = forward(cfg, params, batch)
+    return c.cross_entropy(logits, batch["labels"], cfg.vocab_size) \
+        + aux_weight * aux / cfg.num_layers
+
+
+def prefill(cfg, params, batch):
+    x = tfm.embed_input(cfg, params, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, _, kv = backbone(cfg, params, x, positions, collect_kv=True)
+    k, v = kv
+    cdt = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+    return ({"k": k.astype(cdt), "v": v.astype(cdt)},
+            c.constrain_logits(x[:, -1:] @ params["lm_head"]))
+
+
+def decode_step(cfg, params, cache, token, length):
+    inv_freq = c.rope_freqs(cfg.hd, cfg.rope_base,
+                            tfm._rotary_dim(cfg) or None)
+    x = params["embed"][token]
+    B = x.shape[0]
+    pos = jnp.full((B, 1), length, jnp.int32)
+
+    def body(xc, scans):
+        lp, kc, vc = scans
+        h = tfm._norm(cfg, xc, lp, "ln1")
+        q, k, v = tfm._qkv(cfg, lp, h, pos, inv_freq)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
+                                                 length, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
+                                                 length, axis=1)
+        attn = c.decode_attention(q, kc, vc, length + 1)
+        xc = xc + attn.reshape(B, 1, -1) @ lp["wo"]
+        h2 = tfm._norm(cfg, xc, lp, "ln2")
+        y, _ = moe_ffn(cfg, lp, h2)
+        xc = xc + y
+        return xc, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                               cache["v"]))
+    x = tfm._norm(cfg, x, params, "ln_f")
+    return c.constrain_logits(x @ params["lm_head"]), {"k": k_new, "v": v_new}

@@ -1,0 +1,206 @@
+"""Dense decoder-only transformer (qwen2 / internlm2 / chatglm3 /
+command-r / llava-mistral backbone).
+
+Covers: GQA with arbitrary H:KH ratios, optional QKV bias, full/partial
+RoPE, sliding-window attention, command-r parallel attn+FFN blocks,
+RMSNorm/LayerNorm, gated-SiLU or GELU MLPs, tied or untied LM head.
+Layers are scanned (stacked params). Exposes init/forward/loss/prefill/
+decode_step used by train and serve steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as c
+
+
+def _norm(cfg, x, lp, name):
+    if cfg.norm == "layernorm":
+        return c.layernorm(x, lp[name + "_g"], lp[name + "_b"], cfg.norm_eps)
+    return c.rmsnorm(x, lp[name + "_g"], cfg.norm_eps)
+
+
+def _norm_params(cfg, key, shape_prefix=()):
+    g = jnp.ones(shape_prefix + (cfg.d_model,), c.dtype_of(cfg))
+    out = {"_g": g}
+    if cfg.norm == "layernorm":
+        out["_b"] = jnp.zeros(shape_prefix + (cfg.d_model,), c.dtype_of(cfg))
+    return out
+
+
+def init_layer_params(cfg, key):
+    dt = c.dtype_of(cfg)
+    D, H, KH, hd, F = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd,
+                       cfg.d_ff)
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": c.dense_init(ks[0], D, H * hd, dt),
+        "wk": c.dense_init(ks[1], D, KH * hd, dt),
+        "wv": c.dense_init(ks[2], D, KH * hd, dt),
+        "wo": c.dense_init(ks[3], H * hd, D, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((KH * hd,), dt)
+        p["bv"] = jnp.zeros((KH * hd,), dt)
+    if cfg.mlp == "gelu":
+        p["w_up"] = c.dense_init(ks[4], D, F, dt)
+        p["b_up"] = jnp.zeros((F,), dt)
+        p["w_down"] = c.dense_init(ks[5], F, D, dt)
+        p["b_down"] = jnp.zeros((D,), dt)
+    else:
+        p["w_gate"] = c.dense_init(ks[4], D, F, dt)
+        p["w_up"] = c.dense_init(ks[5], D, F, dt)
+        p["w_down"] = c.dense_init(ks[6], F, D, dt)
+    for nm, k2 in [("ln1", ks[7])]:
+        for suffix, v in _norm_params(cfg, k2).items():
+            p[nm + suffix] = v
+    if not cfg.parallel_block:
+        for suffix, v in _norm_params(cfg, ks[7]).items():
+            p["ln2" + suffix] = v
+    return p
+
+
+def init_params(cfg, key):
+    dt = c.dtype_of(cfg)
+    k1, k2, k3, kl = jax.random.split(key, 4)
+    layers = jax.vmap(lambda k: init_layer_params(cfg, k))(
+        jax.random.split(kl, cfg.num_layers))
+    p = {
+        "embed": c.embed_init(k1, cfg.vocab_padded, cfg.d_model, dt),
+        "lm_head": c.dense_init(k2, cfg.d_model, cfg.vocab_padded, dt),
+        "layers": layers,
+    }
+    for suffix, v in _norm_params(cfg, k3).items():
+        p["ln_f" + suffix] = v
+    return p
+
+
+def _rotary_dim(cfg):
+    rd = int(cfg.hd * cfg.rotary_pct)
+    return rd - (rd % 2)
+
+
+def _qkv(cfg, lp, h, positions, inv_freq):
+    B, S, D = h.shape
+    H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KH, hd)
+    v = v.reshape(B, S, KH, hd)
+    rd = _rotary_dim(cfg)
+    if rd:
+        q = c.apply_rope(q, positions, inv_freq, rd)
+        k = c.apply_rope(k, positions, inv_freq, rd)
+    return q, k, v
+
+
+def _mlp(cfg, lp, h):
+    if cfg.mlp == "gelu":
+        return c.gelu_mlp(h, lp["w_up"], lp["b_up"], lp["w_down"],
+                          lp["b_down"])
+    return c.gated_mlp(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+
+
+def make_layer_fn(cfg, collect_kv: bool):
+    inv_freq = c.rope_freqs(cfg.hd, cfg.rope_base, _rotary_dim(cfg) or None)
+    window = cfg.sliding_window or None
+
+    def layer(x, lp, positions):
+        h = _norm(cfg, x, lp, "ln1")
+        q, k, v = _qkv(cfg, lp, h, positions, inv_freq)
+        attn = c.blockwise_attention(q, k, v, causal=True, window=window)
+        B, S = x.shape[:2]
+        attn_out = attn.reshape(B, S, -1) @ lp["wo"]
+        if cfg.parallel_block:        # command-r: attn & FFN from same norm
+            x = x + attn_out + _mlp(cfg, lp, h)
+        else:
+            x = x + attn_out
+            h2 = _norm(cfg, x, lp, "ln2")
+            x = x + _mlp(cfg, lp, h2)
+        return (x, (k, v)) if collect_kv else (x, None)
+
+    return layer
+
+
+def backbone(cfg, params, x, positions, collect_kv=False):
+    layer = make_layer_fn(cfg, collect_kv)
+
+    def body(xc, lp):
+        return layer(xc, lp, positions)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, kv = jax.lax.scan(body, x, params["layers"])
+    x = _norm(cfg, x, params, "ln_f")
+    return x, kv
+
+
+def embed_input(cfg, params, batch):
+    if "embeds" in batch:
+        return c.constrain_act(batch["embeds"].astype(c.dtype_of(cfg)))
+    return c.constrain_act(params["embed"][batch["tokens"]])
+
+
+def forward(cfg, params, batch):
+    x = embed_input(cfg, params, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, _ = backbone(cfg, params, x, positions)
+    return c.constrain_logits(x @ params["lm_head"])
+
+
+def loss_fn(cfg, params, batch):
+    logits = forward(cfg, params, batch)
+    return c.cross_entropy(logits, batch["labels"], cfg.vocab_size)
+
+
+def prefill(cfg, params, batch):
+    """Full-sequence pass collecting the KV cache."""
+    x = embed_input(cfg, params, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, kv = backbone(cfg, params, x, positions, collect_kv=True)
+    k, v = kv                      # (L, B, S, KH, hd)
+    cdt = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+    logits_last = c.constrain_logits(x[:, -1:] @ params["lm_head"])
+    return {"k": k.astype(cdt), "v": v.astype(cdt)}, logits_last
+
+
+def decode_step(cfg, params, cache, token, length):
+    """One token with a KV cache (written at position ``length``)."""
+    inv_freq = c.rope_freqs(cfg.hd, cfg.rope_base, _rotary_dim(cfg) or None)
+    window = cfg.sliding_window or None
+    x = params["embed"][token]                       # (B, 1, D)
+    B = x.shape[0]
+    pos = jnp.full((B, 1), length, jnp.int32)
+
+    def body(xc, scans):
+        lp, kc, vc = scans
+        h = _norm(cfg, xc, lp, "ln1")
+        q, k, v = _qkv(cfg, lp, h, pos, inv_freq)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
+                                                 length, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
+                                                 length, axis=1)
+        attn = c.decode_attention(q, kc, vc, length + 1, window=window)
+        attn_out = attn.reshape(B, 1, -1) @ lp["wo"]
+        if cfg.parallel_block:
+            xc = xc + attn_out + _mlp(cfg, lp, h)
+        else:
+            xc = xc + attn_out
+            h2 = _norm(cfg, xc, lp, "ln2")
+            xc = xc + _mlp(cfg, lp, h2)
+        return xc, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                               cache["v"]))
+    x = _norm(cfg, x, params, "ln_f")
+    logits = c.constrain_logits(x @ params["lm_head"])
+    return logits, {"k": k_new, "v": v_new}

@@ -1,0 +1,70 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moments.
+
+Memory: O(r+c) per (r,c) matrix instead of O(r*c); the only optimizer
+that fits the 1T-param kimi-k2 config on 512 x 16 GB chips (DESIGN.md).
+No first moment (beta1=0 variant).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import Optimizer, global_norm
+
+
+def adafactor(lr=1e-3, decay=0.8, eps1=1e-30, eps2=1e-3,
+              clip_threshold=1.0, weight_decay=0.0) -> Optimizer:
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"s": jax.tree.map(st, params,
+                                  is_leaf=lambda x: hasattr(x, "ndim")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def upd(p, g, s):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps1
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True)[..., None], eps1)) \
+                    * vc[..., None, :]
+                u = gf * jax.lax.rsqrt(jnp.maximum(denom, eps1))
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(jnp.maximum(v, eps1))
+                ns = {"v": v}
+            # relative update clipping
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            scale = jnp.maximum(
+                eps2, jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))))
+            new_p = p.astype(jnp.float32) - lr_t * scale * u
+            if weight_decay:
+                new_p = new_p - lr_t * weight_decay * p.astype(jnp.float32)
+            return new_p.astype(p.dtype), ns
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["s"])
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_s = tdef.unflatten([o[1] for o in outs])
+        return new_params, {"s": new_s, "step": step}
+
+    return Optimizer(init, update)

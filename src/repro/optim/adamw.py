@@ -1,0 +1,84 @@
+"""AdamW with dtype-configurable moment states (pure-pytree, optax-free)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable        # params -> state
+    update: Callable      # (grads, state, params) -> (new_params, new_state)
+
+    def state_specs(self, params):
+        return jax.eval_shape(self.init, params)
+
+
+def adamw(lr: Any = 3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          state_dtype=None, grad_clip: Optional[float] = 1.0) -> Optimizer:
+    """lr may be a float or a schedule fn(step)->float."""
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(
+            p, dtype=state_dtype or jnp.result_type(p, jnp.float32))
+        return {
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        if grad_clip is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(m.dtype)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * jnp.square(gf)
+            mhat = m2.astype(jnp.float32) / bc1
+            vhat = v2.astype(jnp.float32) / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay \
+                * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), \
+                m2, v2
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr=0.1, momentum=0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        lr_t = lr(state["step"] + 1) if callable(lr) else lr
+        m = jax.tree.map(lambda m, g: momentum * m + g, state["m"], grads)
+        p = jax.tree.map(lambda p, m: (p - lr_t * m).astype(p.dtype),
+                         params, m)
+        return p, {"m": m, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

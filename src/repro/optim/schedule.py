@@ -1,0 +1,19 @@
+"""Learning-rate schedules (pure fns of the int step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak=3e-4, warmup=1000, total=100_000, floor=0.1):
+    def f(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.float32(step)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak * jnp.minimum(warm, cos)
+    return f
+
+
+def constant(lr=3e-4):
+    return lambda step: jnp.float32(lr)

@@ -1,0 +1,25 @@
+"""KV-cache utilities for batched serving."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, cache_specs
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    """Zero-initialised decode state matching configs.cache_specs."""
+    specs = cache_specs(cfg, batch, max_seq)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+
+def cache_bytes(cfg: ArchConfig, batch: int, max_seq: int) -> int:
+    specs = cache_specs(cfg, batch, max_seq)
+    return sum(int(jnp.dtype(s.dtype).itemsize) *
+               int(jnp.prod(jnp.asarray(s.shape)))
+               for s in jax.tree.leaves(specs))
+
+
+def trim_left_pad(cache_entry, new_len: int):
+    """Keep the trailing new_len positions (sliding retention policy)."""
+    return cache_entry[:, :, -new_len:]

@@ -1,0 +1,118 @@
+"""Partitioning rules for params, optimizer state, activations and caches.
+
+Strategy (Megatron-style TP on the "model" axis + ZeRO/FSDP-style weight
+sharding on the "data" axis for large tensors, batch DP over
+("pod","data")):
+
+  * every >=2D weight shards its LAST divisible dim on "model";
+  * leaves with >= FSDP_MIN elements additionally shard another divisible
+    dim on "data" (GSPMD inserts the per-layer all-gathers);
+  * layer-stacked leaves (under "layers"/"enc_layers") never shard dim 0
+    — that is the lax.scan axis;
+  * non-divisible dims fall back to replication (e.g. qwen2's 12 heads on
+    a 16-way model axis);
+  * batch-like inputs shard dim 0 over ("pod","data") when divisible,
+    then ("data",), else replicate (long_500k's batch=1).
+
+The same rule engine covers optimizer states (their leaves mirror param
+shapes or reductions of them), so ZeRO-1 sharding falls out for free.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP_MIN = 1 << 22          # 4M elements: shard weights on "data" too
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _is_stacked(path) -> bool:
+    return any(getattr(k, "key", None) in ("layers", "enc_layers")
+               for k in path)
+
+
+def leaf_spec(path, shape, mesh: Mesh) -> P:
+    if len(shape) == 0:
+        return P()
+    model = _axis_size(mesh, "model")
+    data = _axis_size(mesh, "data")
+    lo = 1 if (_is_stacked(path) and len(shape) > 1) else 0
+    spec = [None] * len(shape)
+    # model axis: last divisible dim
+    m_dim = None
+    if "model" in mesh.axis_names:
+        for d in range(len(shape) - 1, lo - 1, -1):
+            if shape[d] % model == 0 and shape[d] >= model:
+                spec[d] = "model"
+                m_dim = d
+                break
+    # data axis (FSDP) for big leaves: another divisible dim
+    numel = int(np.prod(shape))
+    if ("data" in mesh.axis_names and numel >= FSDP_MIN):
+        for d in range(len(shape) - 1, lo - 1, -1):
+            if d != m_dim and shape[d] % data == 0 and shape[d] >= data:
+                spec[d] = "data"
+                break
+    return P(*spec)
+
+
+def tree_shardings(tree, mesh: Mesh):
+    """NamedSharding pytree for a params/opt-state tree (by shapes)."""
+    def f(path, leaf):
+        return NamedSharding(mesh, leaf_spec(path, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def batch_spec(shape, mesh: Mesh) -> P:
+    """Shard dim0 (batch) over ("pod","data") / ("data",) / replicate."""
+    cands = []
+    if "pod" in mesh.axis_names and "data" in mesh.axis_names:
+        cands.append(("pod", "data"))
+    if "data" in mesh.axis_names:
+        cands.append(("data",))
+    for axes in cands:
+        size = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        if shape[0] % size == 0 and shape[0] >= size:
+            return P(axes if len(axes) > 1 else axes[0],
+                     *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def batch_shardings(tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, batch_spec(l.shape, mesh)), tree)
+
+
+def cache_shardings(tree, mesh: Mesh):
+    """Decode caches: (L, B, S, KH, hd)-style — shard B (dim1) on data,
+    and the head/state dims on model when divisible."""
+    model = _axis_size(mesh, "model")
+    data = _axis_size(mesh, "data")
+
+    pod = _axis_size(mesh, "pod")
+
+    def f(leaf):
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 2:
+            if pod > 1 and leaf.shape[1] % (pod * data) == 0 \
+                    and leaf.shape[1] >= pod * data:
+                spec[1] = ("pod", "data")
+            elif leaf.shape[1] % data == 0 and leaf.shape[1] >= data:
+                spec[1] = "data"
+        for d in range(len(leaf.shape) - 1, 1, -1):
+            if leaf.shape[d] % model == 0 and leaf.shape[d] >= model:
+                spec[d] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(f, tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

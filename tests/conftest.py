@@ -1,0 +1,32 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 device;
+multi-device tests spawn subprocesses with their own flags."""
+import numpy as np
+import pytest
+
+from repro.core.types import Geometry
+from repro.graphs.rmat import rmat
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    return rmat(10, 8, seed=3)          # 1024 vertices, ~6.6K edges
+
+
+@pytest.fixture(scope="session")
+def tiny_graph():
+    return rmat(8, 6, seed=1)           # 256 vertices
+
+
+@pytest.fixture(scope="session")
+def small_geom():
+    return Geometry(U=1024, W=512, T=512, E_BLK=128, big_batch=4)
+
+
+@pytest.fixture(scope="session")
+def tiny_geom():
+    return Geometry(U=512, W=512, T=512, E_BLK=128, big_batch=2)
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

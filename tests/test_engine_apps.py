@@ -1,0 +1,147 @@
+"""End-to-end graph application correctness (vs networkx / numpy oracles)
+across plan modes, and scheduler/perf-model behaviour."""
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import gas, perf_model, schedule
+from repro.core.engine import HeterogeneousEngine
+from repro.core.types import Geometry
+from repro.graphs.rmat import rmat
+
+GEOM = Geometry(U=1024, W=512, T=512, E_BLK=128, big_batch=4)
+
+
+def _nx(graph):
+    G = nx.DiGraph()
+    G.add_nodes_from(range(graph.num_vertices))
+    G.add_edges_from(zip(graph.src.tolist(), graph.dst.tolist()))
+    return G
+
+
+@pytest.mark.parametrize("plan_mode", ["model", "monolithic",
+                                       ("fixed", 2, 2)])
+def test_pagerank_vs_oracle(small_graph, plan_mode):
+    app = gas.make_pagerank(max_iters=8)
+    eng = HeterogeneousEngine(small_graph, app, geom=GEOM, n_lanes=4,
+                              path="ref", plan_mode=plan_mode)
+    props, meta = eng.run(max_iters=8)
+    # numpy pull power-iteration oracle
+    outdeg = np.maximum(small_graph.out_degrees(), 1).astype(np.float32)
+    p = np.full(small_graph.num_vertices, 1 / small_graph.num_vertices,
+                np.float32) / outdeg
+    for _ in range(meta["iterations"]):
+        acc = np.zeros(small_graph.num_vertices, np.float32)
+        np.add.at(acc, small_graph.dst, p[small_graph.src])
+        p = ((1 - 0.85) / small_graph.num_vertices + 0.85 * acc) / outdeg
+    np.testing.assert_allclose(props[:small_graph.num_vertices], p,
+                               rtol=1e-4, atol=1e-8)
+
+
+def test_bfs_vs_networkx(small_graph):
+    app = gas.make_bfs(root=7)
+    eng = HeterogeneousEngine(small_graph, app, geom=GEOM, n_lanes=4,
+                              path="ref")
+    props, _ = eng.run()
+    dist = nx.single_source_shortest_path_length(_nx(small_graph), 7)
+    ref = np.full(small_graph.num_vertices, gas.INF)
+    for k, v in dist.items():
+        ref[k] = v
+    assert np.array_equal(props[:small_graph.num_vertices], ref)
+
+
+def test_wcc_vs_networkx(small_graph):
+    app = gas.make_wcc(max_iters=64)
+    # WCC needs symmetric edges: run on the union graph
+    from repro.graphs.formats import from_edges
+    src = np.concatenate([small_graph.src, small_graph.dst])
+    dst = np.concatenate([small_graph.dst, small_graph.src])
+    g = from_edges(src, dst, num_vertices=small_graph.num_vertices)
+    eng = HeterogeneousEngine(g, app, geom=GEOM, n_lanes=4, path="ref")
+    props, _ = eng.run()
+    comps = list(nx.weakly_connected_components(_nx(g)))
+    for comp in comps:
+        vals = {props[v] for v in comp}
+        assert len(vals) == 1, "component must share one label"
+
+
+def test_sssp_vs_networkx():
+    g = rmat(9, 8, seed=11, weighted=True)
+    app = gas.make_sssp(root=3)
+    eng = HeterogeneousEngine(g, app, geom=GEOM, n_lanes=4, path="ref")
+    props, _ = eng.run(max_iters=64)
+    G = nx.DiGraph()
+    G.add_nodes_from(range(g.num_vertices))
+    for s, d, w in zip(g.src.tolist(), g.dst.tolist(), g.weights.tolist()):
+        G.add_edge(s, d, weight=w)
+    dist = nx.single_source_dijkstra_path_length(G, 3)
+    ref = np.full(g.num_vertices, gas.INF)
+    for k, v in dist.items():
+        ref[k] = v
+    np.testing.assert_allclose(props[:g.num_vertices], ref, rtol=1e-5)
+
+
+def test_closeness_bit_parallel(small_graph):
+    app = gas.make_closeness(sources=np.arange(4), max_iters=16)
+    eng = HeterogeneousEngine(small_graph, app, geom=GEOM, n_lanes=3,
+                              path="ref")
+    props, _ = eng.run()
+    # bit b of vertex v set <=> v reachable from source b
+    G = _nx(small_graph)
+    for b in range(4):
+        reach = nx.descendants(G, b) | {b}
+        got = {v for v in range(small_graph.num_vertices)
+               if props[v] & (1 << b)}
+        assert got == reach
+
+
+def test_scheduler_classifies_and_balances(small_graph):
+    eng = HeterogeneousEngine(small_graph, gas.make_pagerank(), geom=GEOM,
+                              n_lanes=4, path="ref")
+    s = eng.stats()
+    assert s["dense"] + s["sparse"] == sum(
+        1 for i in eng.infos if i.num_edges > 0)
+    assert eng.plan.num_lanes == 4
+    # per-lane modelled load within 2x of each other (balanced)
+    loads = [sum(e.est_time for e in lane) for lane in eng.plan.lanes
+             if lane]
+    if len(loads) > 1:
+        assert max(loads) < 2.5 * (sum(loads) / len(loads)) + 1e-9
+
+
+def test_perf_model_orders_dense_vs_sparse(small_graph):
+    """Dense partitions should prefer Little; sparse prefer Big."""
+    eng = HeterogeneousEngine(small_graph, gas.make_pagerank(), geom=GEOM,
+                              n_lanes=4, path="ref")
+    dense = [i for i in eng.infos if i.is_dense]
+    sparse = [i for i in eng.infos if i.is_dense is False and i.num_edges]
+    for i in dense:
+        assert i.t_little <= i.t_big
+    for i in sparse:
+        assert i.t_big <= i.t_little
+    # with DBG, the first partition is the densest
+    if dense:
+        assert min(d.pid for d in dense) == 0
+
+
+def test_perf_model_calibration(small_graph):
+    eng = HeterogeneousEngine(small_graph, gas.make_pagerank(), geom=GEOM,
+                              n_lanes=2, path="ref")
+    samples = []
+    for i in eng.infos:
+        if i.num_edges == 0:
+            continue
+        samples.append((i, GEOM, "little", i.t_little * 1.7))
+    hw2 = perf_model.calibrate(samples, perf_model.TPU_V5E)
+    # calibrated model should track the synthetic 1.7x-scaled times
+    for i, g, kind, t in samples[:3]:
+        est = perf_model.estimate(i, g, kind, hw2)
+        assert est == pytest.approx(t, rel=0.5)
+
+
+def test_monolithic_uses_only_big(small_graph):
+    eng = HeterogeneousEngine(small_graph, gas.make_pagerank(), geom=GEOM,
+                              n_lanes=4, path="ref", plan_mode="monolithic")
+    assert eng.plan.num_little_lanes == 0
+    kinds = {e.kind for lane in eng.plan.lanes for e in lane}
+    assert kinds <= {"big"}

@@ -1,0 +1,129 @@
+"""Partitioning, DBG and brick-blocking invariants (unit + property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as part
+from repro.core.types import Geometry
+from repro.graphs.formats import from_edges
+from repro.graphs.rmat import rmat
+
+
+def test_dbg_concentrates_high_degree(small_graph):
+    g2, perm = part.apply_dbg(small_graph)
+    ind = g2.in_degrees()
+    # mean in-degree of the first quarter must dominate the last quarter
+    q = g2.num_vertices // 4
+    assert ind[:q].mean() > ind[-q:].mean() * 2
+
+
+def test_dbg_preserves_graph(small_graph):
+    g2, perm = part.apply_dbg(small_graph)
+    assert g2.num_edges == small_graph.num_edges
+    # edge set is preserved under the permutation
+    orig = set(zip(small_graph.src.tolist(), small_graph.dst.tolist()))
+    mapped = set(zip(perm[small_graph.src].tolist(),
+                     perm[small_graph.dst].tolist()))
+    new = set(zip(g2.src.tolist(), g2.dst.tolist()))
+    assert mapped == new and len(orig) == len(new)
+
+
+def test_partition_ranges(small_graph, small_geom):
+    infos, edges = part.partition_graph(small_graph, small_geom)
+    total = 0
+    for i in infos:
+        d = edges["dst"][i.edge_lo:i.edge_hi]
+        assert ((d >= i.dst_lo) & (d < i.dst_lo + small_geom.U)).all()
+        total += i.num_edges
+    assert total == small_graph.num_edges
+
+
+def _roundtrip_edges(blocked, geom):
+    """Recover (src_global?, dst_global) pairs from a blocked layout."""
+    out = []
+    for b in range(blocked.n_blocks):
+        for e in range(geom.E_BLK):
+            if not blocked.valid[b, e]:
+                continue
+            dst = (blocked.tile_dst_start[blocked.tile_id[b]]
+                   + blocked.dst_local[b, e])
+            src_win = blocked.window_id[b]
+            src = src_win * geom.W + blocked.src_local[b, e]
+            out.append((src, dst))
+    return out
+
+
+def test_block_little_roundtrip(small_graph, small_geom):
+    infos, edges = part.partition_graph(small_graph, small_geom)
+    blocked = part.block_little(edges, infos[0], small_geom)
+    got = sorted(_roundtrip_edges(blocked, small_geom))
+    lo, hi = infos[0].edge_lo, infos[0].edge_hi
+    want = sorted(zip(edges["src"][lo:hi].tolist(),
+                      edges["dst"][lo:hi].tolist()))
+    assert got == want
+
+
+def test_block_big_roundtrip(small_graph, small_geom):
+    infos, edges = part.partition_graph(small_graph, small_geom)
+    blocked = part.block_big(edges, infos[:1], small_geom)
+    # big uses compact indices: src = unique_src[win*W + local]
+    got = []
+    for b in range(blocked.n_blocks):
+        for e in range(small_geom.E_BLK):
+            if not blocked.valid[b, e]:
+                continue
+            cid = blocked.window_id[b] * small_geom.W \
+                + blocked.src_local[b, e]
+            src = blocked.unique_src[cid]
+            dst = (blocked.tile_dst_start[blocked.tile_id[b]]
+                   + blocked.dst_local[b, e])
+            got.append((int(src), int(dst)))
+    lo, hi = infos[0].edge_lo, infos[0].edge_hi
+    want = sorted(zip(edges["src"][lo:hi].tolist(),
+                      edges["dst"][lo:hi].tolist()))
+    assert sorted(got) == want
+
+
+def test_blocks_tile_sorted(small_graph, small_geom):
+    infos, edges = part.partition_graph(small_graph, small_geom)
+    blocked = part.block_little(edges, infos[0], small_geom)
+    # output-tile revisits must be consecutive (TPU accumulation safety)
+    tid = blocked.tile_id[:blocked.n_blocks]
+    assert (np.diff(tid) >= 0).all()
+    # tile_first marks exactly the changes
+    tf = blocked.tile_first
+    expect = np.ones_like(tid)
+    expect[1:] = (tid[1:] != tid[:-1]).astype(np.int32)
+    assert (tf == expect).all()
+
+
+def test_blocks_homogeneous(small_graph, small_geom):
+    """Every block holds edges of one (window, tile) brick."""
+    infos, edges = part.partition_graph(small_graph, small_geom)
+    blocked = part.block_little(edges, infos[0], small_geom)
+    assert (blocked.src_local < small_geom.W).all()
+    assert (blocked.dst_local < small_geom.T).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.integers(6, 9), ef=st.integers(2, 12),
+       seed=st.integers(0, 1000))
+def test_property_blocking_preserves_edges(scale, ef, seed):
+    """Property: blocking is lossless for any graph/geometry."""
+    g = rmat(scale, ef, seed=seed)
+    geom = Geometry(U=512, W=512, T=512, E_BLK=128, big_batch=2)
+    infos, edges = part.partition_graph(g, geom)
+    n_real = 0
+    for i in infos:
+        if i.num_edges == 0:
+            continue
+        bl = part.block_little(edges, i, geom)
+        assert bl.num_real_edges == i.num_edges
+        assert bl.valid.sum() == i.num_edges
+        n_real += i.num_edges
+    assert n_real == g.num_edges
+
+
+def test_self_loop_free_and_dedup():
+    g = from_edges([0, 0, 1, 1], [1, 1, 2, 2], num_vertices=4)
+    assert g.num_edges == 2  # deduped
