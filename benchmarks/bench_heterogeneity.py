@@ -10,20 +10,23 @@ Two views:
     combination — on a cache-based CPU random access is as cheap as
     streaming, so Big-everywhere tends to win; that inversion is itself
     the hardware-adaptation finding (DESIGN.md §2) and is reported.
+
+The whole sweep (n_lanes+1 combinations × 2 hardware models) shares ONE
+GraphStore per graph — only planning reruns per combination.
 """
 from __future__ import annotations
 
 import numpy as np
 
+from repro import api
 from repro.core import gas, perf_model
-from repro.core.engine import HeterogeneousEngine
 from repro.graphs import datasets
 
-from .common import GEOM, MEDIUM, cpu_calibrated_hw, emit, mteps
+from .common import GEOM, MEDIUM, cpu_calibrated_hw, emit, mteps, store_for
 
 
-def _modeled_makespan(eng):
-    return max((sum(e.est_time for e in lane) for lane in eng.plan.lanes),
+def _modeled_makespan(plan):
+    return max((sum(e.est_time for e in lane) for lane in plan.lanes),
                default=0.0)
 
 
@@ -33,20 +36,22 @@ def run(graphs=None, n_lanes=8):
     for name in graphs:
         g = datasets.load(name)
         app = gas.make_pagerank(max_iters=2)
+        store = store_for(g)
         tpu = perf_model.TPU_V5E_SCALED
         model_times = {}
         for m in range(0, n_lanes + 1):
             n = n_lanes - m
-            eng = HeterogeneousEngine(g, app, geom=GEOM, n_lanes=n_lanes,
-                                      path="ref", hw=tpu,
-                                      plan_mode=("fixed", m, n))
-            model_times[(m, n)] = _modeled_makespan(eng)
+            bundle = store.plan(api.PlanConfig(
+                mode="fixed", forced_little=m, forced_big=n,
+                n_lanes=n_lanes, hw=tpu))
+            model_times[(m, n)] = _modeled_makespan(bundle.plan)
         best = min(model_times, key=model_times.get)
         homog = min(model_times[(0, n_lanes)], model_times[(n_lanes, 0)])
-        eng_sel = HeterogeneousEngine(g, app, geom=GEOM, n_lanes=n_lanes,
-                                      path="ref", hw=tpu, plan_mode="model")
-        sel = (eng_sel.plan.num_little_lanes, eng_sel.plan.num_big_lanes)
-        t_sel = _modeled_makespan(eng_sel)
+        sel_bundle = store.plan(api.PlanConfig(mode="model",
+                                               n_lanes=n_lanes, hw=tpu))
+        sel = (sel_bundle.plan.num_little_lanes,
+               sel_bundle.plan.num_big_lanes)
+        t_sel = _modeled_makespan(sel_bundle.plan)
         emit(f"fig10.{name}.tpu_best_combo", model_times[best] * 1e6,
              f"{best[0]}L{best[1]}B mteps={mteps(g, max(model_times[best], 1e-12)):.0f}")
         emit(f"fig10.{name}.tpu_homogeneous", homog * 1e6,
@@ -54,14 +59,14 @@ def run(graphs=None, n_lanes=8):
         emit(f"fig10.{name}.tpu_model_selected", t_sel * 1e6,
              f"{sel[0]}L{sel[1]}B frac_of_best="
              f"{model_times[best] / max(t_sel, 1e-12):.2f} (paper: ~0.92)")
-        # CPU-measured ends (hardware-adaptation check)
-        hw_cpu, _ = cpu_calibrated_hw(g, app)
+        # CPU-measured ends (hardware-adaptation check) — same store
+        hw_cpu, _ = cpu_calibrated_hw(store, app)
         meas = {}
         for m, n in [(0, n_lanes), (n_lanes, 0)]:
-            eng = HeterogeneousEngine(g, app, geom=GEOM, n_lanes=n_lanes,
-                                      path="ref", hw=hw_cpu,
-                                      plan_mode=("fixed", m, n))
-            lt = eng.time_lanes(repeats=2)
+            ex = store.executor(app, api.PlanConfig(
+                mode="fixed", forced_little=m, forced_big=n,
+                n_lanes=n_lanes, hw=hw_cpu), path="ref")
+            lt = ex.time_lanes(repeats=2)
             meas[(m, n)] = max(lt) if lt else 0.0
         emit(f"fig10.{name}.cpu_measured_ends", 0.0,
              f"allBig={meas[(0, n_lanes)]*1e3:.2f}ms "

@@ -13,12 +13,12 @@ import time
 import jax
 import numpy as np
 
-from repro.core import gas, partition as part, perf_model
-from repro.core.engine import HeterogeneousEngine
+from repro.core import gas, perf_model
+from repro.core.executor import init_props
 from repro.graphs import datasets
 from repro.kernels import ops
 
-from .common import GEOM, SMALL, cpu_calibrated_hw, emit
+from .common import GEOM, SMALL, cpu_calibrated_hw, emit, store_for
 
 
 def run(graphs=None):
@@ -29,18 +29,16 @@ def run(graphs=None):
     for name in graphs:
         g = datasets.load(name)
         app = gas.make_pagerank(max_iters=2)
-        hw, _ = cpu_calibrated_hw(g, app)
-        eng = HeterogeneousEngine(g, app, geom=GEOM, n_lanes=1, path="ref",
-                                  hw=hw)
-        vprops = eng.init_props()
-        infos = sorted([i for i in eng.infos if i.num_edges > 0],
+        store = store_for(g)
+        hw, _ = cpu_calibrated_hw(store, app)
+        vprops = init_props(store, app)
+        infos = sorted([i for i in store.infos if i.num_edges > 0],
                        key=lambda i: -i.num_edges)[:10]
         for i in infos:
             meas = {}
             for kind in ("little", "big"):
-                work = (part.block_little(eng.edges, i, GEOM)
-                        if kind == "little"
-                        else part.block_big(eng.edges, [i], GEOM))
+                work = (store.little_work(i.pid) if kind == "little"
+                        else store.big_work((i.pid,)))
                 entry = ops.materialize_entry(work, 0, work.n_blocks)
                 f = jax.jit(lambda vp: ops.run_entry(
                     entry, vp, app.scatter, app.gather, "ref")[0])

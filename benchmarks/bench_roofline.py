@@ -10,12 +10,12 @@ import json
 
 import numpy as np
 
+from repro import api
 from repro.core import gas, perf_model
-from repro.core.engine import HeterogeneousEngine
 from repro.graphs import datasets
 from repro.models.moe_schedule import padded_flops_ratio
 
-from .common import GEOM, cpu_calibrated_hw, emit, mteps
+from .common import GEOM, cpu_calibrated_hw, emit, mteps, store_for
 
 
 def vmem_per_lane(geom, kind):
@@ -33,15 +33,16 @@ def macs_per_edge(geom):
 def run(graphs=("r16s", "tcs"), n_lanes=8):
     for name in graphs:
         g = datasets.load(name)
-        hw, _ = cpu_calibrated_hw(g)
+        store = store_for(g)
+        hw, _ = cpu_calibrated_hw(store)
         for mode in ("model", "monolithic"):
-            eng = HeterogeneousEngine(g, gas.make_pagerank(max_iters=2),
-                                      geom=GEOM, n_lanes=n_lanes,
-                                      path="ref", hw=hw, plan_mode=mode)
-            lt = eng.time_lanes(repeats=2)
+            ex = store.executor(gas.make_pagerank(max_iters=2),
+                                api.PlanConfig(mode=mode, n_lanes=n_lanes,
+                                               hw=hw), path="ref")
+            lt = ex.time_lanes(repeats=2)
             t = max(lt) if lt else 1e-9
-            n_little = eng.plan.num_little_lanes
-            n_big = eng.plan.num_big_lanes
+            n_little = ex.plan.num_little_lanes
+            n_big = ex.plan.num_big_lanes
             vmem = (n_little * vmem_per_lane(GEOM, "little")
                     + n_big * vmem_per_lane(GEOM, "big"))
             teps = mteps(g, t) * 1e6

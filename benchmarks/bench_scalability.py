@@ -3,14 +3,15 @@
 Makespan = max over lanes of measured lane time. The paper observes
 near-linear scaling on regular graphs and saturation on small/irregular
 ones (partition-switch overhead) — we report the same speedup curve.
+One GraphStore per graph serves every lane count in the sweep.
 """
 from __future__ import annotations
 
+from repro import api
 from repro.core import gas
-from repro.core.engine import HeterogeneousEngine
 from repro.graphs import datasets
 
-from .common import GEOM, cpu_calibrated_hw, emit, mteps
+from .common import GEOM, cpu_calibrated_hw, emit, mteps, store_for
 
 
 def run(graphs=("r16s", "g17s", "ggs"), lane_counts=(1, 2, 4, 8, 16)):
@@ -18,12 +19,16 @@ def run(graphs=("r16s", "g17s", "ggs"), lane_counts=(1, 2, 4, 8, 16)):
     for name in graphs:
         g = datasets.load(name)
         app = gas.make_pagerank(max_iters=2)
-        hw, _ = cpu_calibrated_hw(g, app)
+        store = store_for(g)
+        hw, _ = cpu_calibrated_hw(store, app)
         base = None
         for nl in lane_counts:
-            eng = HeterogeneousEngine(g, app, geom=GEOM, n_lanes=nl,
-                                      path="ref", hw=hw)
-            lt = eng.time_lanes(repeats=2)
+            ex = store.executor(app, api.PlanConfig(n_lanes=nl, hw=hw),
+                                path="ref")
+            lt = ex.time_lanes(repeats=2)
+            # each lane count materializes its own device entries; drop
+            # them so the sweep's peak memory stays one-plan-deep
+            store.clear_plans()
             t = max(lt) if lt else 0.0
             base = base or t
             out[(name, nl)] = t

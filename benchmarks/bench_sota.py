@@ -5,16 +5,20 @@ the worst-case-provisioned Big pipeline), across PR / BFS / CC.
 Speedup = monolithic makespan / heterogeneous makespan at equal lane
 count — the paper's 1.6-5.9x claim is against exactly this kind of
 baseline (plus platform differences we cannot reproduce on CPU).
+
+The plan is app-independent, so each graph needs exactly TWO plans
+(model + monolithic) from one shared GraphStore — the legacy harness
+rebuilt the full engine 6x per graph.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import gas
-from repro.core.engine import HeterogeneousEngine
+from repro import api
+from repro.core import gas, perf_model
 from repro.graphs import datasets
 
-from .common import GEOM, cpu_calibrated_hw, emit, mteps
+from .common import GEOM, emit, mteps, store_for
 
 APPS = {
     "pr": lambda: gas.make_pagerank(max_iters=2),
@@ -24,24 +28,20 @@ APPS = {
 
 
 def run(graphs=("r16s", "g17s", "tcs", "pks", "hws"), n_lanes=8):
-    from repro.core import perf_model
-
-    def modeled(eng):
+    def modeled(plan):
         return max((sum(e.est_time for e in lane)
-                    for lane in eng.plan.lanes), default=0.0)
+                    for lane in plan.lanes), default=0.0)
 
     speedups = []
     for name in graphs:
         g = datasets.load(name)
-        for app_name, mk in APPS.items():
-            ts = {}
-            for mode in ("model", "monolithic"):
-                eng = HeterogeneousEngine(g, mk(), geom=GEOM,
-                                          n_lanes=n_lanes, path="ref",
-                                          hw=perf_model.TPU_V5E_SCALED,
-                                          plan_mode=mode)
-                ts[mode] = modeled(eng)
-            sp = ts["monolithic"] / max(ts["model"], 1e-12)
+        store = store_for(g)
+        hw = perf_model.TPU_V5E_SCALED
+        ts = {mode: modeled(store.plan(api.PlanConfig(
+                  mode=mode, n_lanes=n_lanes, hw=hw)).plan)
+              for mode in ("model", "monolithic")}
+        sp = ts["monolithic"] / max(ts["model"], 1e-12)
+        for app_name in APPS:
             speedups.append(sp)
             emit(f"tab5.{name}.{app_name}", ts["model"] * 1e6,
                  f"mteps={mteps(g, max(ts['model'], 1e-12)):.0f} "

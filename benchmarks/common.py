@@ -6,8 +6,8 @@ import time
 
 import numpy as np
 
+from repro import api
 from repro.core import gas, perf_model
-from repro.core.engine import HeterogeneousEngine
 from repro.core.types import Geometry
 from repro.graphs import datasets
 
@@ -24,26 +24,31 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     sys.stdout.flush()
 
 
-def cpu_calibrated_hw(graph, app=None, geom=GEOM, n_samples=12):
+def store_for(graph, geom=GEOM) -> api.GraphStore:
+    """Construct a fresh GraphStore (NOT memoized — run_amortization's
+    rebuild baseline relies on that). Benchmarks hold onto the returned
+    store and share it across every plan mode / lane count they sweep —
+    the amortization the layered API exists for."""
+    return api.GraphStore(graph, geom=geom)
+
+
+def cpu_calibrated_hw(graph_or_store, app=None, geom=GEOM, n_samples=12):
     """Calibrate the perf model's coefficients on this host by timing a
     few partitions on both pipeline types (the paper benchmarks memory
     latency to fit Eq. 4's a and b; we least-squares all four terms)."""
     app = app or gas.make_pagerank(max_iters=2)
-    eng = HeterogeneousEngine(graph, app, geom=geom, n_lanes=1, path="ref",
-                              plan_mode="model",
-                              hw=perf_model.TPU_V5E.clone(combine="sum"))
+    store = (graph_or_store if isinstance(graph_or_store, api.GraphStore)
+             else store_for(graph_or_store, geom))
+    from repro.core.executor import init_props
     from repro.kernels import ops
     import jax
-    import jax.numpy as jnp
-    vprops = eng.init_props()
+    vprops = init_props(store, app)
     samples = []
-    infos = sorted([i for i in eng.infos if i.num_edges > 0],
+    infos = sorted([i for i in store.infos if i.num_edges > 0],
                    key=lambda i: -i.num_edges)
     for i in infos[:n_samples]:
-        from repro.core import partition as part
-        for kind, work in (
-                ("little", part.block_little(eng.edges, i, geom)),
-                ("big", part.block_big(eng.edges, [i], geom))):
+        for kind, work in (("little", store.little_work(i.pid)),
+                           ("big", store.big_work((i.pid,)))):
             entry = ops.materialize_entry(work, 0, work.n_blocks)
             if entry is None:
                 continue
@@ -56,7 +61,7 @@ def cpu_calibrated_hw(graph, app=None, geom=GEOM, n_samples=12):
                 t0 = time.perf_counter()
                 f(vprops).block_until_ready()
                 ts.append(time.perf_counter() - t0)
-            samples.append((i, geom, kind, float(np.median(ts))))
+            samples.append((i, store.geom, kind, float(np.median(ts))))
     return perf_model.calibrate(samples, perf_model.TPU_V5E), samples
 
 

@@ -18,7 +18,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: pipelines,heterogeneity,scalability,"
-                         "preprocessing,sota,roofline")
+                         "preprocessing,amortization,sota,roofline")
     ap.add_argument("--quick", action="store_true",
                     help="smaller graph set (CI-speed)")
     args = ap.parse_args()
@@ -42,6 +42,9 @@ def main() -> None:
             graphs=("ggs", "ams") if args.quick
             else ("r16s", "g17s", "ggs", "ams", "hds", "tcs", "pks",
                   "ljs"))),
+        ("amortization", lambda: bench_preprocessing.run_amortization(
+            graphs=("ggs",) if args.quick else ("ggs", "g17s"),
+            n_lanes=4 if args.quick else 8)),
         ("sota", lambda: bench_sota.run(
             graphs=("r16s",) if args.quick
             else ("r16s", "g17s", "tcs", "pks", "hws"),

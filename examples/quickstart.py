@@ -1,32 +1,36 @@
-"""Quickstart: PageRank on an R-MAT graph with the heterogeneous engine.
+"""Quickstart: PageRank on an R-MAT graph with the layered API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import gas
-from repro.core.engine import HeterogeneousEngine
-from repro.core.types import Geometry
+from repro import api
 from repro.graphs.rmat import rmat
 
 graph = rmat(scale=12, edge_factor=16, seed=7)
 print(f"graph: {graph.num_vertices} vertices, {graph.num_edges} edges")
 
-app = gas.make_pagerank(max_iters=20)
-engine = HeterogeneousEngine(
-    graph, app,
-    geom=Geometry(U=2048, W=512, T=512, E_BLK=256, big_batch=8),
+compiled = api.compile(
+    graph, api.make_pagerank(max_iters=20),
+    geom=api.Geometry(U=2048, W=512, T=512, E_BLK=256, big_batch=8),
     n_lanes=8,
 )
-print("schedule:", {k: v for k, v in engine.stats().items()
-                    if k not in ("t_dbg_ms", "t_partition_schedule_ms")})
+print("schedule:", {k: v for k, v in compiled.stats().items()
+                    if not k.startswith("t_")})
 
-props, meta = engine.run()
+props, meta = compiled.run()
 rank = props[:graph.num_vertices] * np.maximum(graph.out_degrees(), 1)
 top = np.argsort(-rank)[:5]
 print(f"converged in {meta['iterations']} iterations")
 print("top-5 vertices by PageRank:", list(zip(top.tolist(),
                                               np.round(rank[top], 6))))
-it = engine.time_iteration()
+it = compiled.time_iteration()
 print(f"one iteration: {it*1e3:.1f} ms "
       f"({graph.num_edges/it/1e6:.0f} MTEPS on this host)")
+
+# the store is reusable: plan a second app without re-preprocessing
+props_bfs, meta_bfs = compiled.store.plan_and_run(api.make_bfs(root=0))
+reached = int((props_bfs[:graph.num_vertices] < 3.0e38).sum())
+print(f"BFS from the same store: {reached} vertices reached "
+      f"in {meta_bfs['iterations']} iterations "
+      f"(cached plans: {compiled.store.stats()['cached_plans']})")

@@ -1,3 +1,9 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Public layering (see repro/api.py for the facade):
+#   store.GraphStore  — app-independent graph prep, built once
+#   planner.Planner   — PlanConfig -> SchedulePlan (cached on the store)
+#   executor.Executor — per-(plan, app) jit'd run loop
+#   engine            — deprecated monolithic shim over the above

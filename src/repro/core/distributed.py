@@ -29,6 +29,27 @@ from .engine import HeterogeneousEngine
 from .gas import GATHER_IDENTITY
 from .types import BlockedEdges, Geometry
 
+# --- jax version compat ----------------------------------------------------
+# jax >= 0.6 promotes shard_map to jax.shard_map and replaces the old
+# replication checker with varying-manual-axes (pcast marks an array
+# varying). On the pinned 0.4.x line, shard_map lives in experimental and
+# check_rep=False plays the role of the explicit pcast.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+    _shard_map = partial(_exp_shard_map, check_rep=False)
+
+
+def _mark_varying(x, axis: str):
+    """Tell the manual-axes checker the accumulator diverges across
+    devices once sharded chunks land (no-op where pcast is absent and
+    check_rep is off)."""
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is None:
+        return x
+    return pcast(x, (axis,), to="varying")
+
 
 def _chunk_work(work: BlockedEdges, blocks_per_chunk: int) -> List[tuple]:
     """Split a work into tile-snapped chunks of <= blocks_per_chunk."""
@@ -174,7 +195,7 @@ class DistributedEngine:
         combine = {"sum": jax.lax.psum, "or": jax.lax.psum,
                    "min": jax.lax.pmin, "max": jax.lax.pmax}[app.gather]
 
-        @partial(jax.shard_map, mesh=self.mesh,
+        @partial(_shard_map, mesh=self.mesh,
                  in_specs=(P(), P(axis), P(axis)), out_specs=P())
         def gather_phase(vprops, little_stack, big_stack):
             # local shard keeps a leading device axis of size 1 — drop it
@@ -182,8 +203,7 @@ class DistributedEngine:
                                  jax.tree.map(lambda x: x[0], s))
             little_stack, big_stack = squeeze(little_stack), squeeze(big_stack)
             accum = jnp.full((V_pad,), ident, dt)
-            # the accumulator diverges across devices once sharded chunks land
-            accum = jax.lax.pcast(accum, (axis,), to="varying")
+            accum = _mark_varying(accum, axis)
             if little_stack is not None:
                 accum = scan_queue(accum, vprops, little_stack, "little",
                                    self.Bl)

@@ -1,237 +1,157 @@
-"""Heterogeneous Big/Little graph engine (paper §III + §IV end-to-end).
+"""DEPRECATED monolithic facade over the layered API.
 
-Pipeline: DBG relabel → dst-range partitioning → perf-model classification
-→ brick blocking (Little per dense partition, Big per sparse batch) →
-model-guided scheduling → iterate (Scatter+Gather kernels → merge → Apply)
-until the app converges.
+``HeterogeneousEngine`` used to fuse app-independent preparation,
+scheduling, and execution into one eager constructor. It is now a thin
+shim over the three layers in ``repro.api``:
 
-``plan_mode``:
-  "model"       — paper's model-guided heterogeneous plan (default)
-  ("fixed",M,N) — forced lane split (paper Fig. 10 sweep)
-  "monolithic"  — homogeneous Big-only baseline (ThunderGP-like SOTA)
+    GraphStore (graph prep, built once)  →  Planner (PlanConfig → plan)
+        →  Executor (materialization + jit'd run loop)
+
+New code should use ``repro.api`` directly::
+
+    from repro import api
+    store = api.GraphStore(graph, geom=geom)
+    props, meta = store.plan_and_run(app)           # plan cached per config
+
+The shim keeps every legacy attribute (``infos``, ``edges``, ``plan``,
+``little_works`` …) so existing tests, benchmarks, and
+``DistributedEngine`` keep working, and accepts the legacy
+``plan_mode: str | tuple`` union (converted via
+``PlanConfig.from_legacy``). Pass ``store=`` to share one GraphStore
+across several engines (the plan cache then amortizes preprocessing).
 """
 from __future__ import annotations
 
-import time
-from typing import List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+import warnings
+from typing import Optional
 
 from ..graphs.formats import Graph
-from ..kernels import ops
-from . import partition as part
-from . import perf_model, schedule
-from .gas import GASApp, GATHER_IDENTITY
-from .types import Geometry, SchedulePlan
+from . import perf_model
+from .executor import Executor
+from .gas import GASApp
+from .planner import PlanConfig
+from .store import GraphStore
+from .types import Geometry
 
 
 class HeterogeneousEngine:
     def __init__(
         self,
-        graph: Graph,
+        graph: Optional[Graph],
         app: GASApp,
-        geom: Geometry = Geometry(),
+        geom: Optional[Geometry] = None,
         n_lanes: int = 8,
         hw: perf_model.HW = perf_model.TPU_V5E,
         path: Optional[str] = None,
-        use_dbg: bool = True,
+        use_dbg: Optional[bool] = None,
         plan_mode="model",
+        store: Optional[GraphStore] = None,
     ):
+        warnings.warn(
+            "HeterogeneousEngine is deprecated; use the layered API in "
+            "repro.api (GraphStore → Planner → Executor, or "
+            "repro.api.compile).", DeprecationWarning, stacklevel=2)
         self.app = app
-        self.geom = geom
         self.n_lanes = n_lanes
         self.hw = hw
-        self.path = path or ops.default_path()
-
-        t0 = time.perf_counter()
-        if use_dbg:
-            self.graph, self.perm = part.apply_dbg(graph)
+        if store is not None:
+            # a shared store fixes graph/geometry/DBG — reject mismatches
+            store.validate_compatible(graph=graph, geom=geom,
+                                      use_dbg=use_dbg)
         else:
-            self.graph = graph
-            self.perm = np.arange(graph.num_vertices, dtype=np.int32)
-        self.t_dbg = time.perf_counter() - t0
+            if graph is None:
+                raise ValueError("HeterogeneousEngine needs a graph when "
+                                 "no store= is given")
+            store = GraphStore(graph, geom=geom or Geometry(),
+                               use_dbg=use_dbg if use_dbg is not None
+                               else True)
+        self.store = store
+        self.geom = self.store.geom
+        self.config = PlanConfig.from_legacy(plan_mode, n_lanes, hw)
+        self.bundle = self.store.plan(self.config)
+        self.executor = Executor(self.store, self.bundle, app, path=path)
+        self.path = self.executor.path
 
-        t0 = time.perf_counter()
-        self.infos, self.edges = part.partition_graph(self.graph, geom)
-        perf_model.classify(self.infos, geom, hw)
-        if plan_mode == "monolithic":
-            for i in self.infos:
-                i.is_dense = False
-        elif isinstance(plan_mode, tuple):
-            _, m_forced, n_forced = plan_mode
-            if m_forced == 0:      # all work through Big pipelines
-                for i in self.infos:
-                    i.is_dense = False
-            elif n_forced == 0:    # all work through Little pipelines
-                for i in self.infos:
-                    i.is_dense = True
-        self.V_pad = part.padded_num_vertices(self.graph.num_vertices, geom)
+    # --- legacy attribute surface (delegation) -------------------------
+    @property
+    def graph(self):
+        return self.store.graph
 
-        # --- blocking -------------------------------------------------------
-        self.little_works = {}
-        dense = [i for i in self.infos if i.is_dense and i.num_edges > 0]
-        sparse = [i for i in self.infos if not i.is_dense and i.num_edges > 0]
-        for i in dense:
-            self.little_works[i.pid] = part.block_little(self.edges, i, geom)
-        self.big_works, self.big_ests = [], []
-        for j in range(0, len(sparse), geom.big_batch):
-            batch = sparse[j:j + geom.big_batch]
-            self.big_works.append(part.block_big(self.edges, batch, geom))
-            self.big_ests.append(perf_model.estimate_big_batch(batch, geom, hw))
+    @property
+    def perm(self):
+        return self.store.perm
 
-        # --- scheduling -------------------------------------------------------
-        if plan_mode == "model":
-            self.plan = schedule.build_plan(
-                self.infos, self.little_works, self.big_works, self.big_ests,
-                geom, n_lanes, hw)
-        elif plan_mode == "monolithic":
-            self.plan = schedule.monolithic_plan(
-                self.infos, self.big_works, self.big_ests, geom, n_lanes)
-        else:
-            _, m, n = plan_mode
-            self.plan = schedule.forced_split_plan(
-                self.infos, self.little_works, self.big_works, self.big_ests,
-                geom, m, n, hw)
-        self.t_schedule = time.perf_counter() - t0
+    @property
+    def edges(self):
+        return self.store.edges
 
-        # --- materialization --------------------------------------------------
-        self.lane_entries: List[List[Tuple[tuple, dict]]] = []
-        for lane in self.plan.lanes:
-            mat = []
-            for e in lane:
-                work = (self.little_works[e.work_id] if e.kind == "little"
-                        else self.big_works[e.work_id])
-                p = ops.materialize_entry(work, e.block_lo, e.block_hi)
-                if p is not None:
-                    mat.append(p)
-            self.lane_entries.append(mat)
+    @property
+    def V_pad(self):
+        return self.store.V_pad
 
-        # aux for apply/init
-        outdeg = np.zeros(self.V_pad, np.float32)
-        outdeg[:self.graph.num_vertices] = self.graph.out_degrees()
-        self.aux = {
-            "outdeg": jnp.asarray(outdeg),
-            "num_v": float(self.graph.num_vertices),
-            "num_v_pad": self.V_pad,
-        }
-        self._iter_fn = None
+    @property
+    def t_dbg(self):
+        return self.store.t_dbg
 
-    # ------------------------------------------------------------------
+    @property
+    def t_schedule(self):
+        # legacy: one timer over partition + classify + block + schedule.
+        # Plan-local blocking time keeps this reproducible when a store
+        # is shared across engines (a fresh store pays it all here).
+        return (self.store.t_partition + self.bundle.t_block
+                + self.bundle.t_plan)
+
+    @property
+    def infos(self):
+        return self.bundle.infos
+
+    @property
+    def little_works(self):
+        return self.bundle.little_works
+
+    @property
+    def big_works(self):
+        return self.bundle.big_works
+
+    @property
+    def big_ests(self):
+        return self.bundle.big_ests
+
+    @property
+    def plan(self):
+        return self.bundle.plan
+
+    @property
+    def lane_entries(self):
+        return self.executor.lane_entries
+
+    @property
+    def aux(self):
+        return self.executor.aux
+
     @property
     def accum_dtype(self):
-        return jnp.int32 if self.app.gather == "or" else jnp.float32
+        return self.executor.accum_dtype
 
+    # --- legacy methods ------------------------------------------------
     def _build_iteration(self):
-        app, geom, path = self.app, self.geom, self.path
-        entries = [p for lane in self.lane_entries for p in lane]
-        ident = GATHER_IDENTITY[app.gather]
-        dt = self.accum_dtype
-
-        def iteration(vprops, aux, it):
-            accum = jnp.full((self.V_pad,), ident, dt)
-            for p in entries:
-                tiles, idx = ops.run_entry(p, vprops, app.scatter, app.gather,
-                                           path)
-                accum = ops.merge_tiles(accum, tiles, idx, geom.T)
-            return app.apply(accum, vprops, aux, it)
-
-        return jax.jit(iteration)
+        return self.executor._build_iteration()
 
     def init_props(self):
-        p = self.app.init(self.aux | {
-            "outdeg": np.asarray(self.aux["outdeg"]),
-            "perm": self.perm,
-        })
-        full = np.full(self.V_pad, GATHER_IDENTITY[self.app.gather],
-                       np.int32 if self.app.gather == "or" else np.float32)
-        full[:p.shape[0]] = p[:self.V_pad]
-        if self.app.name == "pagerank":
-            full[self.graph.num_vertices:] = 0.0
-        return jnp.asarray(full)
+        return self.executor.init_props()
 
     def run(self, max_iters: Optional[int] = None, collect_history=False):
-        """Run to convergence; returns props in ORIGINAL vertex ids."""
-        if self._iter_fn is None:
-            self._iter_fn = self._build_iteration()
-        vprops = self.init_props()
-        iters = max_iters or self.app.max_iters
-        history = []
-        it_done = 0
-        for it in range(iters):
-            new = self._iter_fn(vprops, self.aux, it)
-            new.block_until_ready()
-            it_done = it + 1
-            if collect_history:
-                history.append(np.asarray(new))
-            if self.app.converged(vprops, new, it):
-                vprops = new
-                break
-            vprops = new
-        out = np.asarray(vprops)[self.perm]  # back to original ids
-        return out, {"iterations": it_done, "history": history}
+        return self.executor.run(max_iters=max_iters,
+                                 collect_history=collect_history)
 
-    # ------------------------------------------------------------------
     def time_iteration(self, repeats: int = 5) -> float:
-        """Median wall time of one full iteration (all lanes, serialised —
-        single host device). Used by benchmarks."""
-        if self._iter_fn is None:
-            self._iter_fn = self._build_iteration()
-        vprops = self.init_props()
-        self._iter_fn(vprops, self.aux, 0).block_until_ready()  # warmup
-        ts = []
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            self._iter_fn(vprops, self.aux, 0).block_until_ready()
-            ts.append(time.perf_counter() - t0)
-        return float(np.median(ts))
+        return self.executor.time_iteration(repeats=repeats)
 
     def time_lanes(self, repeats: int = 3):
-        """Per-lane wall times — the quantity the scheduler balances.
-        On real hardware lanes run concurrently; on the host we time them
-        one by one and report max() as the modelled makespan analogue."""
-        app, geom, path = self.app, self.geom, self.path
-        ident = GATHER_IDENTITY[app.gather]
-        dt = self.accum_dtype
-        vprops = self.init_props()
-        out = []
-        for lane in self.lane_entries:
-            if not lane:
-                out.append(0.0)
-                continue
-
-            def lane_fn(vp, entries=tuple(range(len(lane))), lane=lane):
-                accum = jnp.full((self.V_pad,), ident, dt)
-                for p in lane:
-                    tiles, idx = ops.run_entry(p, vp, app.scatter, app.gather,
-                                               path)
-                    accum = ops.merge_tiles(accum, tiles, idx, geom.T)
-                return accum
-
-            f = jax.jit(lane_fn)
-            f(vprops).block_until_ready()
-            ts = []
-            for _ in range(repeats):
-                t0 = time.perf_counter()
-                f(vprops).block_until_ready()
-                ts.append(time.perf_counter() - t0)
-            out.append(float(np.median(ts)))
-        return out
+        return self.executor.time_lanes(repeats=repeats)
 
     def stats(self) -> dict:
-        dense = [i for i in self.infos if i.is_dense]
-        sparse = [i for i in self.infos if i.is_dense is False and i.num_edges]
-        return {
-            "V": self.graph.num_vertices, "E": self.graph.num_edges,
-            "partitions": len(self.infos),
-            "dense": len(dense), "sparse": len(sparse),
-            "little_lanes": self.plan.num_little_lanes,
-            "big_lanes": self.plan.num_big_lanes,
-            "est_makespan": self.plan.est_makespan,
-            "t_dbg_ms": self.t_dbg * 1e3,
-            "t_partition_schedule_ms": self.t_schedule * 1e3,
-        }
+        return self.executor.stats()
 
 
 def run_app(graph: Graph, app: GASApp, **kw):

@@ -1,0 +1,171 @@
+"""Executor — per-(plan, app) materialization and the jit'd run loop.
+
+The Executor is the only layer that touches the device: it turns the
+plan's lane queues into device-resident entry payloads, builds the jit'd
+iteration (Scatter+Gather kernels → merge → Apply), and owns ``run`` /
+``time_iteration`` / ``time_lanes``. The store's aux (out-degrees etc.)
+is shared across every Executor on the same store, so running five apps
+re-uploads nothing app-independent.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from .gas import GASApp, GATHER_IDENTITY
+from .planner import PlanBundle
+
+
+def init_props(store, app: GASApp):
+    """Initial padded property vector for one app on a store (in DBG
+    ids). Needs only store-level state — callers that never execute a
+    plan (e.g. perf-model calibration) use this directly instead of
+    building an Executor."""
+    aux = store.aux
+    p = app.init(aux | {
+        "outdeg": np.asarray(aux["outdeg"]),
+        "perm": store.perm,
+    })
+    full = np.full(store.V_pad, GATHER_IDENTITY[app.gather],
+                   np.int32 if app.gather == "or" else np.float32)
+    full[:p.shape[0]] = p[:store.V_pad]
+    if app.name == "pagerank":
+        full[store.graph.num_vertices:] = 0.0
+    return jnp.asarray(full)
+
+
+class Executor:
+    def __init__(self, store, bundle: PlanBundle, app: GASApp,
+                 path: Optional[str] = None):
+        self.store = store
+        self.bundle = bundle
+        self.app = app
+        self.geom = store.geom
+        self.path = path or ops.default_path()
+        self.V_pad = store.V_pad
+
+        t0 = time.perf_counter()
+        # shared across every app on this plan (memoized on the bundle)
+        self.lane_entries: List[List[dict]] = bundle.lane_entries()
+        self.t_materialize = time.perf_counter() - t0
+
+        self.aux = store.aux
+        self._iter_fn = None
+
+    @property
+    def plan(self):
+        return self.bundle.plan
+
+    # ------------------------------------------------------------------
+    @property
+    def accum_dtype(self):
+        return jnp.int32 if self.app.gather == "or" else jnp.float32
+
+    def _build_iteration(self):
+        app, geom, path = self.app, self.geom, self.path
+        entries = [p for lane in self.lane_entries for p in lane]
+        ident = GATHER_IDENTITY[app.gather]
+        dt = self.accum_dtype
+
+        def iteration(vprops, aux, it):
+            accum = jnp.full((self.V_pad,), ident, dt)
+            for p in entries:
+                tiles, idx = ops.run_entry(p, vprops, app.scatter, app.gather,
+                                           path)
+                accum = ops.merge_tiles(accum, tiles, idx, geom.T)
+            return app.apply(accum, vprops, aux, it)
+
+        return jax.jit(iteration)
+
+    def init_props(self):
+        return init_props(self.store, self.app)
+
+    def run(self, max_iters: Optional[int] = None, collect_history=False):
+        """Run to convergence; returns props in ORIGINAL vertex ids."""
+        if self._iter_fn is None:
+            self._iter_fn = self._build_iteration()
+        vprops = self.init_props()
+        iters = max_iters or self.app.max_iters
+        history = []
+        it_done = 0
+        for it in range(iters):
+            new = self._iter_fn(vprops, self.aux, it)
+            new.block_until_ready()
+            it_done = it + 1
+            if collect_history:
+                history.append(np.asarray(new))
+            if self.app.converged(vprops, new, it):
+                vprops = new
+                break
+            vprops = new
+        out = np.asarray(vprops)[self.store.perm]  # back to original ids
+        return out, {"iterations": it_done, "history": history}
+
+    # ------------------------------------------------------------------
+    def time_iteration(self, repeats: int = 5) -> float:
+        """Median wall time of one full iteration (all lanes, serialised —
+        single host device). Used by benchmarks."""
+        if self._iter_fn is None:
+            self._iter_fn = self._build_iteration()
+        vprops = self.init_props()
+        self._iter_fn(vprops, self.aux, 0).block_until_ready()  # warmup
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            self._iter_fn(vprops, self.aux, 0).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    def time_lanes(self, repeats: int = 3):
+        """Per-lane wall times — the quantity the scheduler balances.
+        On real hardware lanes run concurrently; on the host we time them
+        one by one and report max() as the modelled makespan analogue."""
+        app, geom, path = self.app, self.geom, self.path
+        ident = GATHER_IDENTITY[app.gather]
+        dt = self.accum_dtype
+        vprops = self.init_props()
+        out = []
+        for lane in self.lane_entries:
+            if not lane:
+                out.append(0.0)
+                continue
+
+            def lane_fn(vp, lane=lane):
+                accum = jnp.full((self.V_pad,), ident, dt)
+                for p in lane:
+                    tiles, idx = ops.run_entry(p, vp, app.scatter, app.gather,
+                                               path)
+                    accum = ops.merge_tiles(accum, tiles, idx, geom.T)
+                return accum
+
+            f = jax.jit(lane_fn)
+            f(vprops).block_until_ready()
+            ts = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                f(vprops).block_until_ready()
+                ts.append(time.perf_counter() - t0)
+            out.append(float(np.median(ts)))
+        return out
+
+    def stats(self) -> dict:
+        b, store = self.bundle, self.store
+        return {
+            "V": store.graph.num_vertices, "E": store.graph.num_edges,
+            "partitions": len(b.infos),
+            "dense": len(b.dense), "sparse": len(b.sparse),
+            "little_lanes": b.plan.num_little_lanes,
+            "big_lanes": b.plan.num_big_lanes,
+            "est_makespan": b.plan.est_makespan,
+            "t_dbg_ms": store.t_dbg * 1e3,
+            # plan-local: partitioning + blocking THIS plan paid for
+            # (cache-hit blockings cost 0) + scheduling
+            "t_partition_schedule_ms":
+                (store.t_partition + b.t_block + b.t_plan) * 1e3,
+            "t_plan_ms": b.t_plan * 1e3,
+        }

@@ -21,7 +21,7 @@ the paper's approach of benchmarking memory latency to fit a and b.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Iterable, List, Sequence
 
 import numpy as np
 
@@ -115,13 +115,18 @@ def estimate_big_batch(infos: Sequence[PartitionInfo], geom: Geometry,
 
 
 def classify(infos: Iterable[PartitionInfo], geom: Geometry,
-             hw: HW = TPU_V5E) -> None:
+             hw: HW = TPU_V5E) -> List[PartitionInfo]:
     """Paper §IV-B step 1: dense iff modelled Little time < Big time.
-    Annotates infos in place."""
+    Annotates infos in place and returns them (so callers holding fresh
+    copies — the Planner never classifies the GraphStore's pristine
+    infos — can chain)."""
+    out = []
     for i in infos:
         i.t_little = estimate(i, geom, "little", hw)
         i.t_big = estimate(i, geom, "big", hw)
         i.is_dense = bool(i.t_little < i.t_big)
+        out.append(i)
+    return out
 
 
 def calibrate(samples: Sequence[tuple], hw: HW) -> HW:

@@ -1,0 +1,162 @@
+"""Planner — model-guided scheduling over a GraphStore (paper §IV-B).
+
+The planner is the cheap, per-configuration layer: it classifies
+partitions with the analytic perf model (on a private copy of the
+store's stats), pulls the memoized Little/Big blockings it needs from
+the store, and builds the lane schedule. ``PlanConfig`` replaces the
+legacy ``plan_mode: str | tuple`` union with a validated dataclass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Literal, Optional
+
+from . import perf_model, schedule
+from .types import BlockedEdges, PartitionInfo, SchedulePlan
+
+PlanMode = Literal["model", "monolithic", "fixed"]
+_MODES = ("model", "monolithic", "fixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanConfig:
+    """Typed scheduling configuration.
+
+    mode:
+      "model"      — paper's model-guided heterogeneous plan (default)
+      "monolithic" — homogeneous Big-only baseline (ThunderGP-like SOTA)
+      "fixed"      — forced ``forced_little``:``forced_big`` lane split
+                     (paper Fig. 10 sweep); must sum to ``n_lanes``
+    """
+
+    mode: PlanMode = "model"
+    forced_little: int = 0
+    forced_big: int = 0
+    n_lanes: int = 8
+    hw: perf_model.HW = dataclasses.field(
+        default_factory=lambda: perf_model.TPU_V5E)
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, got "
+                             f"{self.mode!r}")
+        if self.n_lanes < 1:
+            raise ValueError(f"n_lanes must be >= 1, got {self.n_lanes}")
+        if self.forced_little < 0 or self.forced_big < 0:
+            raise ValueError("forced lane counts must be >= 0, got "
+                             f"{self.forced_little}:{self.forced_big}")
+        if self.mode == "fixed":
+            if self.forced_little + self.forced_big != self.n_lanes:
+                raise ValueError(
+                    "fixed split must cover all lanes: forced_little + "
+                    f"forced_big = {self.forced_little + self.forced_big} "
+                    f"!= n_lanes = {self.n_lanes}")
+        elif self.forced_little or self.forced_big:
+            raise ValueError(
+                f"forced_little/forced_big require mode='fixed' "
+                f"(got mode={self.mode!r})")
+
+    def cache_key(self) -> tuple:
+        """Hashable identity for the store's plan cache (HW is an
+        unhashable plain dataclass, so flatten it)."""
+        return (self.mode, self.forced_little, self.forced_big,
+                self.n_lanes, dataclasses.astuple(self.hw))
+
+    @classmethod
+    def from_legacy(cls, plan_mode, n_lanes: int,
+                    hw: Optional[perf_model.HW] = None) -> "PlanConfig":
+        """Convert the legacy ``plan_mode: str | tuple`` union."""
+        hw = hw or perf_model.TPU_V5E
+        if plan_mode == "model":
+            return cls(mode="model", n_lanes=n_lanes, hw=hw)
+        if plan_mode == "monolithic":
+            return cls(mode="monolithic", n_lanes=n_lanes, hw=hw)
+        if isinstance(plan_mode, tuple) and len(plan_mode) == 3:
+            _, m, n = plan_mode
+            # legacy semantics: the tuple overrides n_lanes entirely
+            return cls(mode="fixed", forced_little=int(m), forced_big=int(n),
+                       n_lanes=int(m) + int(n), hw=hw)
+        raise ValueError(f"unrecognized legacy plan_mode: {plan_mode!r}")
+
+
+@dataclasses.dataclass
+class PlanBundle:
+    """A plan plus everything the Executor needs to materialize it:
+    classified partition stats and the blocked works the lanes refer to."""
+
+    config: PlanConfig
+    infos: List[PartitionInfo]               # classified copies
+    little_works: Dict[int, BlockedEdges]    # pid -> Little blocking
+    big_works: List[BlockedEdges]            # batched sparse blockings
+    big_ests: List[float]                    # modelled batch times
+    plan: SchedulePlan
+    t_plan: float                            # planning wall time (s)
+    t_block: float = 0.0                     # blocking paid BY this plan
+                                             # (cache hits cost 0)
+    _lane_entries: Optional[list] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def dense(self) -> List[PartitionInfo]:
+        return [i for i in self.infos if i.is_dense and i.num_edges > 0]
+
+    @property
+    def sparse(self) -> List[PartitionInfo]:
+        return [i for i in self.infos if not i.is_dense and i.num_edges > 0]
+
+    def lane_entries(self) -> list:
+        """Device-resident lane payloads, materialized once per bundle.
+        Entries hold only plan-derived arrays (edges, tiles, windows) —
+        the app's scatter/gather UDFs bind at run time — so every app
+        executing this plan shares them."""
+        if self._lane_entries is None:
+            from ..kernels import ops
+            self._lane_entries = ops.materialize_lanes(
+                self.plan, self.little_works, self.big_works)
+        return self._lane_entries
+
+
+class Planner:
+    """Builds a PlanBundle from a GraphStore + PlanConfig. Stateless
+    beyond its inputs; ``GraphStore.plan`` caches the result."""
+
+    def __init__(self, store, config: PlanConfig):
+        self.store = store
+        self.config = config
+
+    def build(self) -> PlanBundle:
+        store, cfg = self.store, self.config
+        geom = store.geom
+        t0 = time.perf_counter()
+        t_block0 = store.t_block
+
+        infos = store.copy_infos()
+        perf_model.classify(infos, geom, cfg.hw)
+        if cfg.mode == "monolithic":
+            for i in infos:
+                i.is_dense = False
+        elif cfg.mode == "fixed":
+            if cfg.forced_little == 0:    # all work through Big pipelines
+                for i in infos:
+                    i.is_dense = False
+            elif cfg.forced_big == 0:     # all work through Little pipelines
+                for i in infos:
+                    i.is_dense = True
+
+        dense = [i for i in infos if i.is_dense and i.num_edges > 0]
+        sparse = [i for i in infos if not i.is_dense and i.num_edges > 0]
+        little_works = {i.pid: store.little_work(i.pid) for i in dense}
+        big_works, big_ests = [], []
+        for batch in schedule.batch_sparse(sparse, geom.big_batch):
+            big_works.append(store.big_work(tuple(i.pid for i in batch)))
+            big_ests.append(perf_model.estimate_big_batch(batch, geom,
+                                                          cfg.hw))
+
+        plan = schedule.plan_from_config(infos, little_works, big_works,
+                                         big_ests, geom, cfg)
+        t_block = store.t_block - t_block0
+        return PlanBundle(config=cfg, infos=infos, little_works=little_works,
+                          big_works=big_works, big_ests=big_ests, plan=plan,
+                          t_plan=time.perf_counter() - t0 - t_block,
+                          t_block=t_block)

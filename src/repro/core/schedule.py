@@ -21,6 +21,35 @@ from . import perf_model
 from .types import BlockedEdges, Geometry, PartitionInfo, PlanEntry, SchedulePlan
 
 
+def batch_sparse(sparse: Sequence[PartitionInfo],
+                 big_batch: int) -> List[List[PartitionInfo]]:
+    """Group sparse partitions into Big-execution batches (paper: the Big
+    pipelines process N_gpe partitions per execution)."""
+    return [list(sparse[j:j + big_batch])
+            for j in range(0, len(sparse), big_batch)]
+
+
+def plan_from_config(
+    infos: Sequence[PartitionInfo],
+    little_works: Dict[int, BlockedEdges],
+    big_works: List[BlockedEdges],
+    big_work_ests: List[float],
+    geom: Geometry,
+    config,
+) -> SchedulePlan:
+    """Dispatch on a :class:`~.planner.PlanConfig` — the single entry
+    point the Planner uses (replaces the engine's inline union switch)."""
+    if config.mode == "model":
+        return build_plan(infos, little_works, big_works, big_work_ests,
+                          geom, config.n_lanes, config.hw)
+    if config.mode == "monolithic":
+        return monolithic_plan(infos, big_works, big_work_ests, geom,
+                               config.n_lanes)
+    return forced_split_plan(infos, little_works, big_works, big_work_ests,
+                             geom, config.forced_little, config.forced_big,
+                             config.hw)
+
+
 def _lpt(items: List[Tuple[float, PlanEntry]], lanes: int) -> Tuple[List[List[PlanEntry]], float]:
     """Longest-processing-time-first packing; returns queues + makespan."""
     queues: List[List[PlanEntry]] = [[] for _ in range(lanes)]

@@ -1,0 +1,180 @@
+"""GraphStore — the app-independent preparation layer (paper §IV-A).
+
+Everything that depends only on ``(graph, Geometry)`` lives here and is
+computed exactly once: the DBG permutation, dst-range partitioning (the
+pristine :class:`PartitionInfo` stats plus partition-sorted edge arrays),
+and the Little/Big brick blockings. Blockings are built lazily and
+memoized — the first plan that needs a partition's Little layout (or a
+batch's Big layout) pays for it, every later plan reuses it — so running
+all five builtin apps against one store incurs the preprocessing cost
+once. Plans themselves are cached per :class:`~.planner.PlanConfig`.
+
+Layering (see repro/api.py):
+
+    GraphStore  — per (graph, geometry); owns edges + blockings
+      Planner   — per PlanConfig; classification + lane schedule (cheap)
+        Executor — per (plan, app); device arrays + jit'd iteration
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.formats import Graph
+from . import partition as part
+from .types import BlockedEdges, Geometry, PartitionInfo
+
+
+class GraphStore:
+    """App-independent graph state, built once and shared by many plans.
+
+    Parameters
+    ----------
+    graph:   input COO graph (original vertex ids).
+    geom:    blocking geometry; one store serves exactly one geometry.
+    use_dbg: apply degree-based grouping before partitioning (paper §II-A).
+    """
+
+    def __init__(self, graph: Graph, geom: Geometry = Geometry(),
+                 use_dbg: bool = True):
+        self.geom = geom
+        self.use_dbg = use_dbg
+        self.source = graph   # pre-DBG input, for sharing-mismatch checks
+
+        t0 = time.perf_counter()
+        if use_dbg:
+            self.graph, self.perm = part.apply_dbg(graph)
+        else:
+            self.graph = graph
+            self.perm = np.arange(graph.num_vertices, dtype=np.int32)
+        self.t_dbg = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        self._infos, self.edges = part.partition_graph(self.graph, geom)
+        self.V_pad = part.padded_num_vertices(self.graph.num_vertices, geom)
+        self.t_partition = time.perf_counter() - t0
+
+        # lazy, memoized blockings (the expensive app-independent work)
+        self._little_cache: Dict[int, BlockedEdges] = {}
+        self._big_cache: Dict[Tuple[int, ...], BlockedEdges] = {}
+        self.t_block = 0.0
+
+        # plan cache: PlanConfig.cache_key() -> PlanBundle
+        self._plan_cache: Dict[tuple, "object"] = {}
+        self._aux = None
+
+    def validate_compatible(self, graph=None, geom=None, use_dbg=None):
+        """Reject asks that contradict what this store was built with.
+        ``None`` means "use the store's setting" and always passes."""
+        if graph is not None and graph is not self.source:
+            raise ValueError("store= was built from a different graph than "
+                             "the one passed; pass graph=None or the "
+                             "store's own graph")
+        if geom is not None and geom != self.geom:
+            raise ValueError(f"store was built with {self.geom}, but "
+                             f"geom={geom} was requested")
+        if use_dbg is not None and use_dbg != self.use_dbg:
+            raise ValueError(f"store was built with use_dbg={self.use_dbg},"
+                             f" but use_dbg={use_dbg} was requested")
+
+    # -- partition stats ------------------------------------------------
+    @property
+    def infos(self) -> List[PartitionInfo]:
+        """Pristine (unclassified) partition stats. Planners work on
+        copies (see :meth:`copy_infos`) so one store serves plans with
+        different hardware models or forced modes concurrently."""
+        return self._infos
+
+    def copy_infos(self) -> List[PartitionInfo]:
+        return [dataclasses.replace(i) for i in self._infos]
+
+    # -- memoized blocking ---------------------------------------------
+    def little_work(self, pid: int) -> BlockedEdges:
+        """Little-pipeline brick layout of one partition (memoized)."""
+        w = self._little_cache.get(pid)
+        if w is None:
+            t0 = time.perf_counter()
+            w = part.block_little(self.edges, self._infos[pid], self.geom)
+            self.t_block += time.perf_counter() - t0
+            self._little_cache[pid] = w
+        return w
+
+    def big_work(self, pids: Tuple[int, ...]) -> BlockedEdges:
+        """Big-pipeline layout of one batch of partitions (memoized)."""
+        pids = tuple(int(p) for p in pids)
+        w = self._big_cache.get(pids)
+        if w is None:
+            t0 = time.perf_counter()
+            w = part.block_big(self.edges, [self._infos[p] for p in pids],
+                               self.geom)
+            self.t_block += time.perf_counter() - t0
+            self._big_cache[pids] = w
+        return w
+
+    # -- shared device-side aux ----------------------------------------
+    @property
+    def aux(self) -> dict:
+        """Apply/init auxiliary data (device-resident out-degrees etc.),
+        built once and shared by every Executor on this store."""
+        if self._aux is None:
+            outdeg = np.zeros(self.V_pad, np.float32)
+            outdeg[:self.graph.num_vertices] = self.graph.out_degrees()
+            self._aux = {
+                "outdeg": jnp.asarray(outdeg),
+                "num_v": float(self.graph.num_vertices),
+                "num_v_pad": self.V_pad,
+            }
+        return self._aux
+
+    # -- planning / execution ------------------------------------------
+    def plan(self, config=None):
+        """Build (or fetch the cached) :class:`~.planner.PlanBundle` for a
+        :class:`~.planner.PlanConfig`."""
+        from .planner import PlanConfig, Planner
+        config = config or PlanConfig()
+        key = config.cache_key()
+        bundle = self._plan_cache.get(key)
+        if bundle is None:
+            bundle = Planner(self, config).build()
+            self._plan_cache[key] = bundle
+        return bundle
+
+    def clear_plans(self) -> int:
+        """Drop every cached PlanBundle (and the device-resident lane
+        entries memoized on them). Blockings stay cached, so re-planning
+        costs milliseconds. Use when sweeping many configs whose
+        materialized entries would otherwise accumulate on device."""
+        n = len(self._plan_cache)
+        self._plan_cache.clear()
+        return n
+
+    def executor(self, app, config=None, path: Optional[str] = None):
+        """Materialize an :class:`~.executor.Executor` for one app on the
+        (cached) plan for ``config``."""
+        from .executor import Executor
+        return Executor(self, self.plan(config), app, path=path)
+
+    def plan_and_run(self, app, config=None, path: Optional[str] = None,
+                     max_iters: Optional[int] = None,
+                     collect_history: bool = False):
+        """One-call convenience: plan (cached) + execute one app."""
+        ex = self.executor(app, config, path=path)
+        return ex.run(max_iters=max_iters, collect_history=collect_history)
+
+    # -- reporting ------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "V": self.graph.num_vertices,
+            "E": self.graph.num_edges,
+            "partitions": len(self._infos),
+            "t_dbg_ms": self.t_dbg * 1e3,
+            "t_partition_ms": self.t_partition * 1e3,
+            "t_block_ms": self.t_block * 1e3,
+            "cached_little_works": len(self._little_cache),
+            "cached_big_works": len(self._big_cache),
+            "cached_plans": len(self._plan_cache),
+        }

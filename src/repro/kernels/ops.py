@@ -80,6 +80,24 @@ def materialize_entry(blocked: BlockedEdges, lo: int, hi: int):
     return payload
 
 
+def materialize_lanes(plan, little_works, big_works):
+    """Materialize every plan entry, preserving the plan's lane structure.
+    Empty (fully snapped-away) entries are dropped — their tiles are
+    covered by the neighbouring slice. Shared by the Executor and any
+    harness that replays a SchedulePlan."""
+    lanes = []
+    for lane in plan.lanes:
+        mat = []
+        for e in lane:
+            work = (little_works[e.work_id] if e.kind == "little"
+                    else big_works[e.work_id])
+            p = materialize_entry(work, e.block_lo, e.block_hi)
+            if p is not None:
+                mat.append(p)
+        lanes.append(mat)
+    return lanes
+
+
 def run_entry(entry: dict, vprops_padded, scatter_fn, mode: str,
               path: Optional[str] = None):
     """Returns (tiles (n_out_tiles, T), tile_idx (n_out_tiles,))."""

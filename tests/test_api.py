@@ -1,0 +1,208 @@
+"""Layered API (GraphStore → Planner → Executor): equivalence with the
+legacy engine, PlanConfig validation, caching, and deprecation."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import gas
+from repro.core.engine import HeterogeneousEngine, run_app
+from repro.core.types import Geometry
+from repro.graphs.rmat import rmat
+
+GEOM = Geometry(U=1024, W=512, T=512, E_BLK=128, big_batch=4)
+
+FIVE_APPS = [
+    ("pagerank", lambda: gas.make_pagerank(max_iters=8)),
+    ("bfs", lambda: gas.make_bfs(root=7)),
+    ("sssp", lambda: gas.make_sssp(root=3)),
+    ("wcc", lambda: gas.make_wcc()),
+    ("closeness", lambda: gas.make_closeness(sources=np.arange(4))),
+]
+
+
+@pytest.fixture(scope="module")
+def weighted_graph():
+    return rmat(10, 8, seed=3, weighted=True)
+
+
+@pytest.fixture(scope="module")
+def shared_store(weighted_graph):
+    return api.GraphStore(weighted_graph, geom=GEOM)
+
+
+# ------------------------------------------------------------------ (a)
+@pytest.mark.parametrize("app_name,mk", FIVE_APPS)
+def test_store_built_once_matches_legacy_engine(shared_store, weighted_graph,
+                                                app_name, mk):
+    """ONE GraphStore shared across all five apps must yield bit-identical
+    results to a fresh per-app HeterogeneousEngine."""
+    cfg = api.PlanConfig(n_lanes=4)
+    p_new, m_new = shared_store.plan_and_run(mk(), cfg, path="ref",
+                                             max_iters=8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng = HeterogeneousEngine(weighted_graph, mk(), geom=GEOM,
+                                  n_lanes=4, path="ref")
+    p_old, m_old = eng.run(max_iters=8)
+    assert m_new["iterations"] == m_old["iterations"], app_name
+    np.testing.assert_array_equal(p_new, p_old, err_msg=app_name)
+
+
+@pytest.mark.parametrize("mode,kw", [
+    ("monolithic", {}),
+    ("fixed", {"forced_little": 2, "forced_big": 2}),
+])
+def test_plan_modes_match_legacy(shared_store, weighted_graph, mode, kw):
+    cfg = api.PlanConfig(mode=mode, n_lanes=4, **kw)
+    app = gas.make_pagerank(max_iters=4)
+    p_new, _ = shared_store.plan_and_run(app, cfg, path="ref", max_iters=4)
+    legacy_mode = (mode if mode == "monolithic"
+                   else ("fixed", kw["forced_little"], kw["forced_big"]))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng = HeterogeneousEngine(weighted_graph, app, geom=GEOM, n_lanes=4,
+                                  path="ref", plan_mode=legacy_mode)
+    p_old, _ = eng.run(max_iters=4)
+    np.testing.assert_array_equal(p_new, p_old)
+
+
+def test_store_memoizes_blocking_and_plans(shared_store):
+    cfg = api.PlanConfig(n_lanes=4)
+    b1 = shared_store.plan(cfg)
+    b2 = shared_store.plan(api.PlanConfig(n_lanes=4))  # equal, new instance
+    assert b1 is b2, "equal configs must hit the plan cache"
+    b3 = shared_store.plan(api.PlanConfig(n_lanes=2))
+    assert b3 is not b1
+    # blockings are shared object-identically across plans
+    for pid, w in b1.little_works.items():
+        if pid in b3.little_works:
+            assert b3.little_works[pid] is w
+
+
+def test_planner_does_not_mutate_store_infos(shared_store):
+    shared_store.plan(api.PlanConfig(n_lanes=4))
+    assert all(i.is_dense is None for i in shared_store.infos), \
+        "classification must happen on copies, not the pristine store stats"
+
+
+def test_compile_convenience(weighted_graph):
+    compiled = api.compile(weighted_graph, "pagerank", geom=GEOM,
+                           n_lanes=4, path="ref")
+    props, meta = compiled.run(max_iters=4)
+    assert props.shape[0] >= weighted_graph.num_vertices
+    assert meta["iterations"] >= 1
+    assert compiled.plan.num_lanes == 4
+    # reuse the store for a second app without re-preprocessing
+    c2 = api.compile(None, "bfs", store=compiled.store, n_lanes=4,
+                     path="ref")
+    assert c2.store is compiled.store
+    with pytest.raises(ValueError):
+        api.compile(None, "bfs")  # no graph and no store
+    with pytest.raises(ValueError):
+        api.compile(weighted_graph, "bfs",
+                    config=api.PlanConfig(), n_lanes=2)  # both config+kwargs
+    with pytest.raises(ValueError):
+        api.compile(None, "pagerankk", store=compiled.store)  # unknown app
+    # a shared store fixes graph/geometry/DBG: contradicting asks are loud
+    with pytest.raises(ValueError):
+        api.compile(None, "bfs", store=compiled.store,
+                    geom=Geometry(U=2048, W=512, T=512, E_BLK=128))
+    with pytest.raises(ValueError):
+        api.compile(None, "bfs", store=compiled.store, use_dbg=False)
+    with pytest.raises(ValueError):
+        api.compile(rmat(8, 6, seed=9), "bfs", store=compiled.store)
+    # the store's own graph / matching geom are fine
+    api.compile(weighted_graph, "bfs", store=compiled.store, geom=GEOM,
+                n_lanes=4, path="ref")
+
+
+def test_store_clear_plans(weighted_graph):
+    store = api.GraphStore(weighted_graph, geom=GEOM)
+    b1 = store.plan(api.PlanConfig(n_lanes=2))
+    assert store.clear_plans() == 1
+    b2 = store.plan(api.PlanConfig(n_lanes=2))
+    assert b2 is not b1, "cleared plans must rebuild"
+    # blockings survive the clear (re-planning stays cheap)
+    assert store.stats()["cached_little_works"] > 0 or \
+        store.stats()["cached_big_works"] > 0
+
+
+def test_legacy_shim_rejects_store_mismatches(weighted_graph):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng = HeterogeneousEngine(weighted_graph,
+                                  gas.make_pagerank(max_iters=2),
+                                  geom=GEOM, n_lanes=2, path="ref")
+        for kw in (dict(graph=rmat(8, 6, seed=9)),
+                   dict(graph=None,
+                        geom=Geometry(U=2048, W=512, T=512, E_BLK=128)),
+                   dict(graph=None, use_dbg=False)):
+            with pytest.raises(ValueError):
+                HeterogeneousEngine(app=gas.make_bfs(root=0), n_lanes=2,
+                                    path="ref", store=eng.store, **kw)
+        with pytest.raises(ValueError):
+            HeterogeneousEngine(None, gas.make_bfs(root=0))  # no graph/store
+
+
+# ------------------------------------------------------------------ (b)
+@pytest.mark.parametrize("bad", [
+    dict(mode="weird"),
+    dict(n_lanes=0),
+    dict(n_lanes=-3),
+    dict(forced_little=2),                                    # not fixed
+    dict(mode="fixed", forced_little=3, forced_big=3, n_lanes=4),
+    dict(mode="fixed", forced_little=-1, forced_big=5, n_lanes=4),
+    dict(mode="fixed", forced_little=0, forced_big=0, n_lanes=1),
+])
+def test_plan_config_rejects_bad_splits(bad):
+    with pytest.raises(ValueError):
+        api.PlanConfig(**bad)
+
+
+def test_plan_config_accepts_valid_splits():
+    api.PlanConfig(mode="fixed", forced_little=0, forced_big=4, n_lanes=4)
+    api.PlanConfig(mode="fixed", forced_little=4, forced_big=0, n_lanes=4)
+    api.PlanConfig(mode="monolithic", n_lanes=1)
+
+
+def test_plan_config_from_legacy():
+    cfg = api.PlanConfig.from_legacy(("fixed", 2, 6), n_lanes=4, hw=None)
+    assert (cfg.mode, cfg.forced_little, cfg.forced_big, cfg.n_lanes) == \
+        ("fixed", 2, 6, 8)  # tuple overrides n_lanes, legacy semantics
+    assert api.PlanConfig.from_legacy("monolithic", 4).mode == "monolithic"
+    with pytest.raises(ValueError):
+        api.PlanConfig.from_legacy("mystery", 4)
+
+
+# ------------------------------------------------------------------ (c)
+def test_legacy_engine_emits_deprecation_warning(weighted_graph):
+    with pytest.warns(DeprecationWarning, match="HeterogeneousEngine"):
+        HeterogeneousEngine(weighted_graph, gas.make_pagerank(max_iters=2),
+                            geom=GEOM, n_lanes=2, path="ref")
+
+
+def test_legacy_shim_surface(weighted_graph):
+    """The shim keeps the attribute surface tests/benchmarks rely on."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng = HeterogeneousEngine(weighted_graph,
+                                  gas.make_pagerank(max_iters=2),
+                                  geom=GEOM, n_lanes=4, path="ref")
+    assert eng.plan.num_lanes == 4
+    assert len(eng.infos) == len(eng.store.infos)
+    assert set(eng.edges) == {"src", "dst", "weights"}
+    assert eng.V_pad % GEOM.U == 0
+    s = eng.stats()
+    for key in ("V", "E", "partitions", "dense", "sparse", "little_lanes",
+                "big_lanes", "est_makespan", "t_dbg_ms",
+                "t_partition_schedule_ms"):
+        assert key in s
+    # sharing a store across engines reuses plans and blockings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng2 = HeterogeneousEngine(weighted_graph, gas.make_bfs(root=0),
+                                   geom=GEOM, n_lanes=4, path="ref",
+                                   store=eng.store)
+    assert eng2.plan is eng.plan

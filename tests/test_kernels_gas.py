@@ -3,6 +3,7 @@ oracle, swept over shapes/dtypes/modes with hypothesis."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, not a collection error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import partition as part

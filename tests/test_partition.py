@@ -1,6 +1,7 @@
 """Partitioning, DBG and brick-blocking invariants (unit + property)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, not a collection error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import partition as part
