@@ -1,0 +1,97 @@
+"""Serving benchmark: throughput + latency under a mixed workload.
+
+Several RMAT graphs × the five builtin apps are pushed through a
+GraphService twice — a COLD pass (every store/plan built on demand)
+and a WARM pass (everything cached) — plus a duplicate burst that
+measures coalescing. Emits p50/p99 end-to-end latency, throughput,
+and cache hit rates.
+
+    PYTHONPATH=src python -m benchmarks.run --only serving [--smoke]
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core.types import Geometry
+from repro.graphs.rmat import rmat
+
+from .common import emit
+
+APPS = [
+    ("pagerank", {}),
+    ("bfs", {"root": 0}),
+    ("sssp", {"root": 0}),
+    ("wcc", {}),
+    ("closeness", {"sources": np.arange(4)}),
+]
+
+
+def _graphs(smoke: bool):
+    if smoke:
+        return [rmat(8, 6, seed=s, weighted=True) for s in (1, 2, 3)]
+    return [rmat(sc, 8, seed=s, weighted=True)
+            for s, sc in ((1, 10), (2, 11), (3, 12))]
+
+
+def _drain(svc, graphs, n_lanes, max_iters, label):
+    """Submit the full graph × app matrix, wait for all, emit stats."""
+    t0 = time.perf_counter()
+    handles = [svc.submit(g, name, app_kwargs=kw, n_lanes=n_lanes,
+                          max_iters=max_iters)
+               for g in graphs for name, kw in APPS]
+    for h in handles:
+        h.result(timeout=600)
+    wall = time.perf_counter() - t0
+    lat = sorted(h.metrics.t_total_ms for h in handles)
+    p50 = lat[len(lat) // 2]
+    p99 = lat[min(len(lat) - 1, int(round(0.99 * (len(lat) - 1))))]
+    emit(f"serving.{label}.p50", p50 * 1e3, f"{len(handles)}req")
+    emit(f"serving.{label}.p99", p99 * 1e3, f"{len(handles)}req")
+    emit(f"serving.{label}.throughput",
+         wall / len(handles) * 1e6, f"{len(handles) / wall:.2f}rps")
+    return handles
+
+
+def run(smoke: bool = False, n_lanes: int = 4, workers: int = 2,
+        max_iters: int = 5):
+    graphs = _graphs(smoke)
+    geom = (Geometry(U=512, W=512, T=512, E_BLK=128, big_batch=2) if smoke
+            else Geometry(U=2048, W=512, T=512, E_BLK=256, big_batch=8))
+    if smoke:
+        n_lanes, max_iters = 2, 3
+
+    with api.GraphService(workers=workers, default_geom=geom,
+                          default_path="ref" if smoke else None,
+                          byte_budget=None) as svc:
+        _drain(svc, graphs, n_lanes, max_iters, "cold")
+        warm = _drain(svc, graphs, n_lanes, max_iters, "warm")
+        assert all(h.metrics.store_hit for h in warm), \
+            "warm pass must hit the store cache"
+
+        # coalescing burst: N identical requests, executed once
+        ex0 = svc.metrics.executions
+        burst = [svc.submit(graphs[0], "pagerank", n_lanes=n_lanes,
+                            max_iters=max_iters) for _ in range(16)]
+        for h in burst:
+            h.result(timeout=600)
+        emit("serving.coalesce.executions",
+             float(svc.metrics.executions - ex0), "of 16 submits")
+
+        snap = svc.metrics.snapshot()
+        emit("serving.store_hit_rate", snap["store_hit_rate"] * 100,
+             f"{snap['store_hits']}/{snap['store_hits'] + snap['store_misses']}")
+        emit("serving.plan_hit_rate", snap["plan_hit_rate"] * 100,
+             f"{snap['plan_hits']}/{snap['plan_hits'] + snap['plan_misses']}")
+        emit("serving.queue.p50_wait", (snap["p50_queue_ms"] or 0.0) * 1e3,
+             f"depth={snap['queue_depth']}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

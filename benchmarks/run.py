@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV lines (see benchmarks/common.emit).
   Tab. IV  bench_preprocessing  DBG / partition+schedule cost
   Tab. V   bench_sota           vs monolithic (ThunderGP-like) baseline
   Fig. 13  bench_roofline       resource-centric roofline analogue
+  —        bench_serving        GraphService throughput/latency/caching
 """
 from __future__ import annotations
 
@@ -18,16 +19,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: pipelines,heterogeneity,scalability,"
-                         "preprocessing,amortization,sota,roofline")
+                         "preprocessing,amortization,sota,roofline,serving")
     ap.add_argument("--quick", action="store_true",
                     help="smaller graph set (CI-speed)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiniest graphs (implies --quick; CI smoke tier)")
     args = ap.parse_args()
+    if args.smoke:
+        args.quick = True
     want = (None if args.only == "all"
             else set(args.only.split(",")))
 
     from . import (bench_heterogeneity, bench_pipelines,
                    bench_preprocessing, bench_roofline, bench_scalability,
-                   bench_sota)
+                   bench_serving, bench_sota)
 
     suites = [
         ("pipelines", lambda: bench_pipelines.run(
@@ -52,6 +57,8 @@ def main() -> None:
         ("roofline", lambda: bench_roofline.run(
             graphs=("r16s",) if args.quick else ("r16s", "tcs"),
             n_lanes=4 if args.quick else 8)),
+        # --quick has no mid tier for serving; it gets the smoke sizes
+        ("serving", lambda: bench_serving.run(smoke=args.quick)),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

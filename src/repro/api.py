@@ -26,6 +26,13 @@ Amortized multi-app use (build the store once, plan each app)::
     store = api.GraphStore(graph, geom=geom)
     for name in ("pagerank", "bfs", "wcc"):
         props, meta = store.plan_and_run(api.BUILTIN_APPS[name]())
+
+Serving (multi-tenant: LRU of stores + request queue + coalescing —
+see repro/serve_graph/)::
+
+    with api.GraphService(byte_budget=512 << 20, workers=2) as svc:
+        handles = [svc.submit(g, name) for name in api.BUILTIN_APPS]
+        results = [h.result(timeout=120) for h in handles]
 """
 from __future__ import annotations
 
@@ -39,13 +46,17 @@ from .core.perf_model import HW, TPU_V5E, TPU_V5E_SCALED
 from .core.planner import PlanBundle, PlanConfig, Planner
 from .core.store import GraphStore
 from .core.types import Geometry, SchedulePlan
-from .graphs.formats import Graph
+from .graphs.formats import Graph, fingerprint as graph_fingerprint
+from .serve_graph import (GraphService, GraphStoreCache, RequestHandle,
+                          ServiceMetrics)
 
 __all__ = [
     "BUILTIN_APPS", "CompiledApp", "Executor", "GASApp", "Geometry",
-    "GraphStore", "HW", "PlanBundle", "PlanConfig", "Planner",
-    "SchedulePlan", "TPU_V5E", "TPU_V5E_SCALED", "compile",
-    "make_bfs", "make_closeness", "make_pagerank", "make_sssp", "make_wcc",
+    "GraphService", "GraphStore", "GraphStoreCache", "HW", "PlanBundle",
+    "PlanConfig", "Planner", "RequestHandle", "SchedulePlan",
+    "ServiceMetrics", "TPU_V5E", "TPU_V5E_SCALED", "compile",
+    "graph_fingerprint", "make_bfs", "make_closeness", "make_pagerank",
+    "make_sssp", "make_wcc",
 ]
 
 

@@ -9,6 +9,7 @@ legacy ``plan_mode: str | tuple`` union with a validated dataclass.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, List, Literal, Optional
 
@@ -17,6 +18,14 @@ from .types import BlockedEdges, PartitionInfo, SchedulePlan
 
 PlanMode = Literal["model", "monolithic", "fixed"]
 _MODES = ("model", "monolithic", "fixed")
+
+
+def _quantize_sig(x: float, sig: int = 3) -> float:
+    """Round to ``sig`` significant digits (0.0 and non-finite pass
+    through). Used to coarsen calibrated-HW floats in plan cache keys."""
+    if x == 0.0 or x != x or x in (float("inf"), float("-inf")):
+        return x
+    return float(f"{x:.{sig}g}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,9 +68,21 @@ class PlanConfig:
 
     def cache_key(self) -> tuple:
         """Hashable identity for the store's plan cache (HW is an
-        unhashable plain dataclass, so flatten it)."""
+        unhashable plain dataclass, so flatten it).
+
+        HW floats are quantized to 3 significant digits IN THE KEY ONLY:
+        host calibration (``perf_model.calibrate``) refits every
+        coefficient from noisy timings, so two back-to-back calibrations
+        differ in the 5th digit while describing the same machine.
+        Keying on exact floats would give every recalibration its own
+        cached plan (and its own pinned device entries); quantizing
+        makes near-identical calibrations share one plan. The config's
+        own ``hw`` is untouched — only the cache identity coarsens.
+        """
+        hw_key = tuple(_quantize_sig(v) if isinstance(v, float) else v
+                       for v in dataclasses.astuple(self.hw))
         return (self.mode, self.forced_little, self.forced_big,
-                self.n_lanes, dataclasses.astuple(self.hw))
+                self.n_lanes, hw_key)
 
     @classmethod
     def from_legacy(cls, plan_mode, n_lanes: int,
@@ -96,6 +117,8 @@ class PlanBundle:
                                              # (cache hits cost 0)
     _lane_entries: Optional[list] = dataclasses.field(
         default=None, repr=False, compare=False)
+    _mat_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     @property
     def dense(self) -> List[PartitionInfo]:
@@ -106,15 +129,18 @@ class PlanBundle:
         return [i for i in self.infos if not i.is_dense and i.num_edges > 0]
 
     def lane_entries(self) -> list:
-        """Device-resident lane payloads, materialized once per bundle.
-        Entries hold only plan-derived arrays (edges, tiles, windows) —
-        the app's scatter/gather UDFs bind at run time — so every app
-        executing this plan shares them."""
-        if self._lane_entries is None:
-            from ..kernels import ops
-            self._lane_entries = ops.materialize_lanes(
-                self.plan, self.little_works, self.big_works)
-        return self._lane_entries
+        """Device-resident lane payloads, materialized once per bundle
+        (lock-guarded: plan caches share bundles across service worker
+        threads, and double-materializing would silently double device
+        memory). Entries hold only plan-derived arrays (edges, tiles,
+        windows) — the app's scatter/gather UDFs bind at run time — so
+        every app executing this plan shares them."""
+        with self._mat_lock:
+            if self._lane_entries is None:
+                from ..kernels import ops
+                self._lane_entries = ops.materialize_lanes(
+                    self.plan, self.little_works, self.big_works)
+            return self._lane_entries
 
 
 class Planner:

@@ -17,7 +17,9 @@ Layering (see repro/api.py):
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -37,12 +39,25 @@ class GraphStore:
     graph:   input COO graph (original vertex ids).
     geom:    blocking geometry; one store serves exactly one geometry.
     use_dbg: apply degree-based grouping before partitioning (paper §II-A).
+    max_plans: bound on the per-store plan LRU. Cached PlanBundles pin
+             their materialized device-side lane entries, so an unbounded
+             cache grows device memory with every distinct PlanConfig
+             swept; the least-recently-used bundle is dropped once the
+             bound is hit. Executors already holding an evicted bundle
+             keep working — they own a reference; eviction only stops
+             NEW plan() calls from reusing it.
     """
 
+    DEFAULT_MAX_PLANS = 32
+
     def __init__(self, graph: Graph, geom: Geometry = Geometry(),
-                 use_dbg: bool = True):
+                 use_dbg: bool = True, max_plans: Optional[int] = None):
         self.geom = geom
         self.use_dbg = use_dbg
+        self.max_plans = (self.DEFAULT_MAX_PLANS if max_plans is None
+                          else int(max_plans))
+        if self.max_plans < 1:
+            raise ValueError(f"max_plans must be >= 1, got {max_plans}")
         self.source = graph   # pre-DBG input, for sharing-mismatch checks
 
         t0 = time.perf_counter()
@@ -63,8 +78,12 @@ class GraphStore:
         self._big_cache: Dict[Tuple[int, ...], BlockedEdges] = {}
         self.t_block = 0.0
 
-        # plan cache: PlanConfig.cache_key() -> PlanBundle
-        self._plan_cache: Dict[tuple, "object"] = {}
+        # plan LRU: PlanConfig.cache_key() -> PlanBundle (bounded by
+        # max_plans; most-recently-used last)
+        self._plan_cache: "collections.OrderedDict[tuple, object]" = \
+            collections.OrderedDict()
+        self._plan_lock = threading.RLock()
+        self.plan_evictions = 0
         self._aux = None
 
     def validate_compatible(self, graph=None, geom=None, use_dbg=None):
@@ -119,37 +138,58 @@ class GraphStore:
     @property
     def aux(self) -> dict:
         """Apply/init auxiliary data (device-resident out-degrees etc.),
-        built once and shared by every Executor on this store."""
+        built once and shared by every Executor on this store (the lock
+        keeps concurrent service workers from uploading it twice)."""
         if self._aux is None:
-            outdeg = np.zeros(self.V_pad, np.float32)
-            outdeg[:self.graph.num_vertices] = self.graph.out_degrees()
-            self._aux = {
-                "outdeg": jnp.asarray(outdeg),
-                "num_v": float(self.graph.num_vertices),
-                "num_v_pad": self.V_pad,
-            }
+            with self._plan_lock:
+                if self._aux is None:
+                    outdeg = np.zeros(self.V_pad, np.float32)
+                    outdeg[:self.graph.num_vertices] = \
+                        self.graph.out_degrees()
+                    self._aux = {
+                        "outdeg": jnp.asarray(outdeg),
+                        "num_v": float(self.graph.num_vertices),
+                        "num_v_pad": self.V_pad,
+                    }
         return self._aux
 
     # -- planning / execution ------------------------------------------
     def plan(self, config=None):
         """Build (or fetch the cached) :class:`~.planner.PlanBundle` for a
-        :class:`~.planner.PlanConfig`."""
+        :class:`~.planner.PlanConfig`. The cache is a bounded LRU (see
+        ``max_plans``) and this method is thread-safe: concurrent callers
+        asking for the same config get one build and one shared bundle."""
         from .planner import PlanConfig, Planner
         config = config or PlanConfig()
         key = config.cache_key()
-        bundle = self._plan_cache.get(key)
-        if bundle is None:
+        with self._plan_lock:
+            bundle = self._plan_cache.get(key)
+            if bundle is not None:
+                self._plan_cache.move_to_end(key)
+                return bundle
             bundle = Planner(self, config).build()
             self._plan_cache[key] = bundle
+            while len(self._plan_cache) > self.max_plans:
+                self._plan_cache.popitem(last=False)
+                self.plan_evictions += 1
         return bundle
+
+    def has_plan(self, config=None) -> bool:
+        """True when ``plan(config)`` would hit the cache (does NOT touch
+        LRU recency — a pure peek, used by serving metrics)."""
+        from .planner import PlanConfig
+        config = config or PlanConfig()
+        with self._plan_lock:
+            return config.cache_key() in self._plan_cache
 
     def clear_plans(self) -> int:
         """Drop every cached PlanBundle (and the device-resident lane
         entries memoized on them). Blockings stay cached, so re-planning
         costs milliseconds. Use when sweeping many configs whose
         materialized entries would otherwise accumulate on device."""
-        n = len(self._plan_cache)
-        self._plan_cache.clear()
+        with self._plan_lock:
+            n = len(self._plan_cache)
+            self._plan_cache.clear()
         return n
 
     def executor(self, app, config=None, path: Optional[str] = None):
@@ -166,6 +206,37 @@ class GraphStore:
         return ex.run(max_iters=max_iters, collect_history=collect_history)
 
     # -- reporting ------------------------------------------------------
+    def memory_footprint(self) -> dict:
+        """Byte accounting of everything this store keeps alive: the
+        (DBG'd) graph arrays, partition-sorted edge arrays, memoized
+        Little/Big blockings, cached plans' device-resident lane entries,
+        and the shared aux. Feeds the serving layer's byte-budgeted
+        store LRU and metrics."""
+        graph_bytes = self.graph.src.nbytes + self.graph.dst.nbytes
+        if self.graph.weights is not None:
+            graph_bytes += self.graph.weights.nbytes
+        graph_bytes += self.perm.nbytes
+        edge_bytes = sum(int(a.nbytes) for a in self.edges.values())
+        with self._plan_lock:
+            blocking_bytes = sum(
+                _blocked_nbytes(w) for w in self._little_cache.values())
+            blocking_bytes += sum(
+                _blocked_nbytes(w) for w in self._big_cache.values())
+            plan_bytes = sum(_bundle_nbytes(b)
+                             for b in self._plan_cache.values())
+        aux_bytes = 0
+        if self._aux is not None:
+            aux_bytes = int(self._aux["outdeg"].nbytes)
+        return {
+            "graph_bytes": int(graph_bytes),
+            "edge_bytes": int(edge_bytes),
+            "blocking_bytes": int(blocking_bytes),
+            "plan_bytes": int(plan_bytes),
+            "aux_bytes": int(aux_bytes),
+            "total_bytes": int(graph_bytes + edge_bytes + blocking_bytes
+                               + plan_bytes + aux_bytes),
+        }
+
     def stats(self) -> dict:
         return {
             "V": self.graph.num_vertices,
@@ -177,4 +248,33 @@ class GraphStore:
             "cached_little_works": len(self._little_cache),
             "cached_big_works": len(self._big_cache),
             "cached_plans": len(self._plan_cache),
+            "plan_evictions": self.plan_evictions,
+            **self.memory_footprint(),
         }
+
+
+def _blocked_nbytes(w) -> int:
+    """Host bytes held by one BlockedEdges (numpy brick arrays)."""
+    total = 0
+    for f in dataclasses.fields(w):
+        v = getattr(w, f.name)
+        if isinstance(v, np.ndarray):
+            total += int(v.nbytes)
+    return total
+
+
+def _bundle_nbytes(bundle) -> int:
+    """Bytes a cached PlanBundle pins BEYOND the store's own caches:
+    its materialized device-side lane entries (the blockings it
+    references are the store's memoized ones, counted once there).
+    Un-materialized bundles pin ~nothing."""
+    entries = getattr(bundle, "_lane_entries", None)
+    if not entries:
+        return 0
+    total = 0
+    for lane in entries:
+        for payload in lane:
+            for v in payload.values():
+                if hasattr(v, "nbytes"):
+                    total += int(v.nbytes)
+    return total

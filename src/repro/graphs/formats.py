@@ -8,6 +8,7 @@ and the performance model.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Optional
 
 import numpy as np
@@ -43,6 +44,29 @@ class Graph:
     def in_degrees(self) -> np.ndarray:
         return np.bincount(self.dst, minlength=self.num_vertices).astype(np.int32)
 
+    def fingerprint(self, refresh: bool = False) -> str:
+        """Stable content hash of the graph (see :func:`fingerprint`).
+
+        The digest is cached on the instance; rebinding ``weights`` (or
+        any array attribute) to a *new* array invalidates it, but pure
+        in-place mutation of an existing array does not — pass
+        ``refresh=True`` after in-place edits. The cache token holds
+        strong references to the hashed arrays and compares by object
+        identity, so a rebound-then-GC'd array can't alias a stale
+        digest via id() reuse.
+        """
+        cached = getattr(self, "_fp_cache", None)
+        if (not refresh and cached is not None
+                and cached[0] == self.num_vertices
+                and cached[1] is self.src and cached[2] is self.dst
+                and cached[3] is self.weights):
+            return cached[4]
+        fp = fingerprint(self)
+        object.__setattr__(
+            self, "_fp_cache",
+            (self.num_vertices, self.src, self.dst, self.weights, fp))
+        return fp
+
     def reversed(self) -> "Graph":
         """Transpose (used by pull-based execution: edges point dst->src)."""
         g = Graph(
@@ -53,6 +77,24 @@ class Graph:
             name=self.name + "_T",
         )
         return canonicalize(g)
+
+
+def fingerprint(g: Graph) -> str:
+    """Stable content hash of a graph: vertex count + edge arrays (+
+    weights when present). The ``name`` field is cosmetic and excluded,
+    so the same edges loaded under two names share one fingerprint —
+    this is the identity the serving layer keys GraphStores on.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(f"V={g.num_vertices};E={g.num_edges};".encode())
+    h.update(np.ascontiguousarray(g.src, dtype=np.int32).tobytes())
+    h.update(np.ascontiguousarray(g.dst, dtype=np.int32).tobytes())
+    if g.weights is None:
+        h.update(b";w=none")
+    else:
+        h.update(b";w=f32;")
+        h.update(np.ascontiguousarray(g.weights, dtype=np.float32).tobytes())
+    return h.hexdigest()
 
 
 def canonicalize(g: Graph) -> Graph:

@@ -1,0 +1,23 @@
+"""Graph serving subsystem: multi-tenant front-end over the layered API.
+
+Layering (each piece usable on its own):
+
+    fingerprint  — content identity of a Graph; (fp, Geometry, use_dbg)
+                   keys one GraphStore
+    store_cache  — byte-budgeted LRU of GraphStores with pinning
+    service      — GraphService: FIFO request queue, worker draining,
+                   coalescing of identical in-flight requests
+    metrics      — per-request latency breakdown + service counters
+
+See README.md §Serving and examples/serving.py.
+"""
+from .fingerprint import StoreKey, graph_fingerprint, store_key
+from .metrics import RequestMetrics, ServiceMetrics
+from .service import GraphService, RequestHandle, ServiceClosed
+from .store_cache import GraphStoreCache
+
+__all__ = [
+    "GraphService", "GraphStoreCache", "RequestHandle", "RequestMetrics",
+    "ServiceClosed", "ServiceMetrics", "StoreKey", "graph_fingerprint",
+    "store_key",
+]

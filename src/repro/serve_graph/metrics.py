@@ -1,0 +1,170 @@
+"""Serving metrics: per-request latency breakdown + service counters.
+
+Every request carries a :class:`RequestMetrics` record filled in as it
+moves through the service (queue wait → store build/fetch → plan →
+execute); :class:`ServiceMetrics` aggregates them into hit/miss
+counters and bounded latency reservoirs with percentile queries. All
+mutation is lock-guarded — worker threads record concurrently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import Deque, Dict, Optional
+
+__all__ = ["RequestMetrics", "ServiceMetrics"]
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Latency breakdown and cache outcomes of one serviced request.
+    Times are milliseconds; ``None`` means the stage never ran (e.g. a
+    failed request, or a coalesced duplicate that piggybacked on
+    another request's execution). Coalesced duplicates still carry
+    their own end-to-end ``t_total_ms`` and the hit flags of the
+    execution that produced their result."""
+
+    request_id: int
+    app: str
+    fingerprint: str
+    coalesced: bool = False           # attached to an in-flight twin job
+    store_hit: Optional[bool] = None
+    plan_hit: Optional[bool] = None
+    t_queue_ms: Optional[float] = None    # submit -> worker pickup
+    t_store_ms: Optional[float] = None    # GraphStore fetch-or-build
+    t_plan_ms: Optional[float] = None     # Planner (cache hit ~ 0)
+    t_execute_ms: Optional[float] = None  # Executor materialize + run
+    t_total_ms: Optional[float] = None    # submit -> result available
+    error: Optional[str] = None
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class _Reservoir:
+    """Bounded sample reservoir (keeps the most recent ``maxlen``)."""
+
+    def __init__(self, maxlen: int = 2048):
+        self._samples: Deque[float] = deque(maxlen=maxlen)
+
+    def add(self, x: float) -> None:
+        self._samples.append(float(x))
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def percentile(self, p: float) -> Optional[float]:
+        """Nearest-rank percentile of the retained samples (p in
+        [0, 100]); None when empty."""
+        if not self._samples:
+            return None
+        xs = sorted(self._samples)
+        rank = max(0, min(len(xs) - 1, int(round(p / 100.0 * (len(xs) - 1)))))
+        return xs[rank]
+
+    def mean(self) -> Optional[float]:
+        if not self._samples:
+            return None
+        return sum(self._samples) / len(self._samples)
+
+
+class ServiceMetrics:
+    """Aggregate counters + latency distributions for a GraphService."""
+
+    STAGES = ("queue", "store", "plan", "execute", "total")
+
+    def __init__(self, reservoir_size: int = 2048):
+        self._lock = threading.Lock()
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.executions = 0          # jobs actually run (post-coalescing)
+        self.coalesced = 0           # requests that rode an in-flight job
+        self.store_hits = 0
+        self.store_misses = 0
+        self.plan_hits = 0
+        self.plan_misses = 0
+        self.store_evictions = 0
+        self._stage: Dict[str, _Reservoir] = {
+            s: _Reservoir(reservoir_size) for s in self.STAGES}
+        self._queue_depth_fn = None  # wired by the service
+
+    # -- recording ------------------------------------------------------
+    def record_submit(self, coalesced: bool) -> None:
+        with self._lock:
+            self.submitted += 1
+            if coalesced:
+                self.coalesced += 1
+
+    def record_execution(self, store_hit: bool, plan_hit: bool) -> None:
+        with self._lock:
+            self.executions += 1
+            if store_hit:
+                self.store_hits += 1
+            else:
+                self.store_misses += 1
+            if plan_hit:
+                self.plan_hits += 1
+            else:
+                self.plan_misses += 1
+
+    def record_eviction(self, n: int = 1) -> None:
+        with self._lock:
+            self.store_evictions += n
+
+    def record_done(self, m: RequestMetrics) -> None:
+        with self._lock:
+            if m.error is None:
+                self.completed += 1
+            else:
+                self.failed += 1
+            for stage, val in (("queue", m.t_queue_ms),
+                               ("store", m.t_store_ms),
+                               ("plan", m.t_plan_ms),
+                               ("execute", m.t_execute_ms),
+                               ("total", m.t_total_ms)):
+                if val is not None:
+                    self._stage[stage].add(val)
+
+    # -- queries --------------------------------------------------------
+    def latency_ms(self, stage: str = "total", p: float = 50.0):
+        with self._lock:    # workers append concurrently via record_done
+            return self._stage[stage].percentile(p)
+
+    @property
+    def store_hit_rate(self) -> float:
+        n = self.store_hits + self.store_misses
+        return self.store_hits / n if n else 0.0
+
+    @property
+    def plan_hit_rate(self) -> float:
+        n = self.plan_hits + self.plan_misses
+        return self.plan_hits / n if n else 0.0
+
+    @property
+    def queue_depth(self) -> int:
+        fn = self._queue_depth_fn
+        return int(fn()) if fn is not None else 0
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            snap = {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "failed": self.failed,
+                "executions": self.executions,
+                "coalesced": self.coalesced,
+                "store_hits": self.store_hits,
+                "store_misses": self.store_misses,
+                "plan_hits": self.plan_hits,
+                "plan_misses": self.plan_misses,
+                "store_evictions": self.store_evictions,
+                "queue_depth": self.queue_depth,
+            }
+            for s in self.STAGES:
+                snap[f"p50_{s}_ms"] = self._stage[s].percentile(50)
+                snap[f"p99_{s}_ms"] = self._stage[s].percentile(99)
+        snap["store_hit_rate"] = self.store_hit_rate
+        snap["plan_hit_rate"] = self.plan_hit_rate
+        return snap

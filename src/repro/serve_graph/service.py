@@ -1,0 +1,471 @@
+"""GraphService — multi-tenant serving front-end over the layered API.
+
+The service turns the library's GraphStore → Planner → Executor stack
+into a long-lived system: requests (graph-or-fingerprint, app, config)
+go into a FIFO queue, worker threads drain it, and two cache layers do
+the heavy lifting — a byte-budgeted LRU of GraphStores across graphs
+(:class:`~.store_cache.GraphStoreCache`) and each store's bounded plan
+LRU within a graph. Identical in-flight requests are coalesced: N
+concurrent PageRank submissions on the same graph execute once and fan
+the result out to every caller's handle.
+
+Quickstart::
+
+    from repro.serve_graph import GraphService
+
+    with GraphService(byte_budget=512 << 20, workers=2) as svc:
+        h1 = svc.submit(graph, "pagerank", n_lanes=8)
+        h2 = svc.submit(graph, "bfs", app_kwargs={"root": 0})
+        props, meta = h1.result(timeout=60)
+
+Submission by fingerprint (no graph payload on the hot path)::
+
+    fp = svc.register(graph)          # prepare + remember the graph
+    h = svc.submit(fingerprint=fp, app="pagerank")
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+import traceback
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from ..core.executor import Executor
+from ..core.gas import BUILTIN_APPS, GASApp
+from ..core.planner import PlanConfig
+from ..core.store import GraphStore
+from ..core.types import Geometry
+from ..graphs.formats import Graph
+from .fingerprint import StoreKey, resolve_fingerprint, store_key
+from .metrics import RequestMetrics, ServiceMetrics
+from .store_cache import GraphStoreCache
+
+__all__ = ["GraphService", "RequestHandle", "ServiceClosed"]
+
+_SENTINEL = object()
+
+
+class ServiceClosed(RuntimeError):
+    """Raised by submit() after close()."""
+
+
+class RequestHandle:
+    """Future-like handle for one submitted request.
+
+    ``result(timeout)`` blocks for (props, meta); ``exception()``
+    returns the failure instead of raising. Coalesced duplicates share
+    one execution, so their handles resolve to the *same* result
+    objects — treat returned arrays as read-only.
+    """
+
+    def __init__(self, request_id: int, metrics: RequestMetrics):
+        self.request_id = request_id
+        self.metrics = metrics
+        self._t_submit = time.perf_counter()   # this handle's own clock
+        self._event = threading.Event()
+        self._result: Optional[tuple] = None
+        self._exception: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request_id} not done within {timeout}s")
+        if self._exception is not None:
+            raise self._exception
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request_id} not done within {timeout}s")
+        return self._exception
+
+    # service-side
+    def _set_result(self, value: tuple) -> None:
+        self._result = value
+        self._event.set()
+
+    def _set_exception(self, exc: BaseException) -> None:
+        self._exception = exc
+        self._event.set()
+
+
+class _Job:
+    """One unit of execution: a coalescing group of identical requests."""
+
+    __slots__ = ("key", "skey", "graph", "app_name", "make_app", "config",
+                 "use_dbg", "geom", "max_iters", "path", "handles",
+                 "t_submit")
+
+    def __init__(self, key, skey: StoreKey, graph: Optional[Graph],
+                 app_name: str, make_app, config: PlanConfig,
+                 geom: Geometry, use_dbg: bool,
+                 max_iters: Optional[int], path: Optional[str]):
+        self.key = key
+        self.skey = skey
+        self.graph = graph
+        self.app_name = app_name
+        self.make_app = make_app
+        self.config = config
+        self.geom = geom
+        self.use_dbg = use_dbg
+        self.max_iters = max_iters
+        self.path = path
+        # guarded by the service lock: attachment of coalesced twins and
+        # the finishing snapshot must be mutually atomic
+        self.handles: List[RequestHandle] = []
+        self.t_submit = time.perf_counter()
+
+
+class GraphService:
+    """Multi-tenant graph-processing service (request queue + caches).
+
+    Parameters
+    ----------
+    byte_budget / max_stores: forwarded to the internal
+        :class:`GraphStoreCache` (ignored when ``cache=`` is given).
+    workers: number of draining threads. 1 gives strict FIFO execution;
+        more overlap store builds of different graphs.
+    default_geom / default_use_dbg / default_path: per-request
+        defaults; each submit() may override.
+    max_plans_per_store: bound of each store's plan LRU.
+    max_executors: bound of the warm-path Executor LRU. Store and plan
+        caches make re-PLANNING cheap, but a fresh Executor re-traces
+        the jit'd iteration on every request; caching executors keyed
+        like coalescing keys (store, app, config, path) lets warm
+        repeats reuse the compiled function. Executors of an evicted
+        store are purged with it (they would otherwise keep its device
+        arrays alive behind the byte budget's back).
+    """
+
+    def __init__(self, *, cache: Optional[GraphStoreCache] = None,
+                 byte_budget: Optional[int] = None,
+                 max_stores: Optional[int] = None,
+                 workers: int = 1,
+                 default_geom: Optional[Geometry] = None,
+                 default_use_dbg: bool = True,
+                 default_path: Optional[str] = None,
+                 max_plans_per_store: Optional[int] = None,
+                 max_executors: int = 64,
+                 metrics: Optional[ServiceMetrics] = None):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self.metrics = metrics or ServiceMetrics()
+        self.cache = cache or GraphStoreCache(
+            byte_budget=byte_budget, max_stores=max_stores,
+            on_evict=self._on_store_evicted)
+        self.default_geom = default_geom or Geometry()
+        self.default_use_dbg = default_use_dbg
+        self.default_path = default_path
+        self.max_plans_per_store = max_plans_per_store
+        self.max_executors = max_executors
+        self._executors: "collections.OrderedDict[tuple, Executor]" = \
+            collections.OrderedDict()
+
+        self._queue: "queue.Queue" = queue.Queue()
+        self.metrics._queue_depth_fn = self._queue.qsize
+        self._lock = threading.Lock()
+        self._inflight: Dict[tuple, _Job] = {}
+        self._registry: Dict[str, Graph] = {}   # fp -> graph (rebuilds)
+        self._next_id = 0
+        self._closed = False
+        self._workers = [
+            threading.Thread(target=self._worker_loop, daemon=True,
+                             name=f"graph-serve-{i}")
+            for i in range(workers)]
+        for w in self._workers:
+            w.start()
+
+    # -- lifecycle ------------------------------------------------------
+    def __enter__(self) -> "GraphService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self, wait: bool = True) -> None:
+        """Stop accepting work; by default drain the queue and join the
+        workers (each worker eats one sentinel and exits). The closed
+        flag and the sentinels go in under the service lock, atomically
+        with submit()'s enqueue — a racing submit either lands before
+        the sentinels (and is drained) or raises ServiceClosed."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            for _ in self._workers:
+                self._queue.put(_SENTINEL)
+        if wait:
+            for w in self._workers:
+                w.join()
+            with self._lock:
+                self._executors.clear()
+
+    # -- registration ---------------------------------------------------
+    def register(self, graph: Graph, *, geom: Optional[Geometry] = None,
+                 use_dbg: Optional[bool] = None,
+                 prepare: bool = True) -> str:
+        """Remember a graph so later submits can pass only its
+        fingerprint, and (by default) prepare its GraphStore eagerly so
+        the first request is a warm hit. Returns the fingerprint."""
+        fp = graph.fingerprint()
+        with self._lock:
+            self._registry[fp] = graph
+        if prepare:
+            geom = geom or self.default_geom
+            use_dbg = (self.default_use_dbg if use_dbg is None
+                       else use_dbg)
+            skey = store_key(fp, geom, use_dbg)
+            self.cache.get_or_build(
+                skey, lambda: self._build_store(graph, geom, use_dbg))
+        return fp
+
+    def unregister(self, fingerprint: str) -> bool:
+        """Forget a registered graph (its cached store, if any, stays
+        until normally evicted; it just can't be REBUILT from the
+        registry afterwards). Returns whether it was registered."""
+        with self._lock:
+            return self._registry.pop(fingerprint, None) is not None
+
+    def _on_store_evicted(self, skey: StoreKey, store: GraphStore) -> None:
+        """Cache-eviction hook: purge the evicted store's executors so
+        they don't keep its device arrays alive past the byte budget.
+        In-flight runs still hold their own executor reference and
+        finish untouched."""
+        self.metrics.record_eviction()
+        with self._lock:
+            for k in [k for k in self._executors if k[0] == skey]:
+                del self._executors[k]
+
+    def _build_store(self, graph: Graph, geom: Geometry = None,
+                     use_dbg: bool = None) -> GraphStore:
+        return GraphStore(
+            graph,
+            geom=geom or self.default_geom,
+            use_dbg=self.default_use_dbg if use_dbg is None else use_dbg,
+            max_plans=self.max_plans_per_store)
+
+    # -- submission -----------------------------------------------------
+    def submit(self, graph: Union[Graph, str, None] = None,
+               app: Union[GASApp, str] = "pagerank", *,
+               fingerprint: Optional[str] = None,
+               app_kwargs: Optional[dict] = None,
+               config: Optional[PlanConfig] = None,
+               geom: Optional[Geometry] = None,
+               use_dbg: Optional[bool] = None,
+               max_iters: Optional[int] = None,
+               path: Optional[str] = None,
+               **cfg) -> RequestHandle:
+        """Enqueue one request; returns immediately with a
+        :class:`RequestHandle`.
+
+        ``graph`` may be a :class:`Graph`, a fingerprint string, or None
+        with ``fingerprint=`` set (the graph must then be registered or
+        its store still cached). ``app`` is a builtin name (coalescable;
+        parameterize via ``app_kwargs``) or a prebuilt :class:`GASApp`
+        (coalesced only with submissions of that same instance — the
+        service can't see inside arbitrary closures). Extra kwargs
+        become :class:`PlanConfig` fields, as in :func:`repro.api.compile`.
+
+        Submitting a Graph does NOT retain it past the request: if its
+        store is later evicted, a fingerprint-only resubmit needs the
+        Graph again — or :meth:`register` it once (registered graphs
+        are kept until :meth:`unregister` and always rebuildable).
+        """
+        if config is not None and cfg:
+            raise ValueError("pass either config= or PlanConfig kwargs, "
+                             "not both")
+        config = config or PlanConfig(**cfg)
+        geom = geom or self.default_geom
+        use_dbg = self.default_use_dbg if use_dbg is None else bool(use_dbg)
+        path = path or self.default_path
+
+        graph_obj = graph if isinstance(graph, Graph) else None
+        fp = resolve_fingerprint(graph, fingerprint)
+        skey = store_key(fp, geom, use_dbg)
+
+        app_name, app_token, make_app = _normalize_app(app, app_kwargs)
+        if graph_obj is None:
+            # NOTE: no auto-registration on the Graph path — only
+            # register() pins graphs on the service, so serving many
+            # distinct graphs can't grow host memory behind the store
+            # cache's byte budget
+            with self._lock:
+                graph_obj = self._registry.get(fp)
+            if graph_obj is None and skey not in self.cache:
+                raise KeyError(
+                    f"fingerprint {fp[:12]}… is neither registered nor "
+                    f"cached; pass the Graph or register() it first")
+
+        job_key = (skey, app_token, config.cache_key(), max_iters, path)
+        with self._lock:
+            # closed-check is atomic with the enqueue: close() inserts
+            # its sentinels under this same lock, so a submit can never
+            # land a job behind them (which no worker would ever drain)
+            if self._closed:
+                raise ServiceClosed("submit() after close()")
+            self._next_id += 1
+            rid = self._next_id
+            job = self._inflight.get(job_key)
+            coalesced = job is not None
+            m = RequestMetrics(request_id=rid, app=app_name,
+                               fingerprint=fp, coalesced=coalesced)
+            handle = RequestHandle(rid, m)
+            if coalesced:
+                # piggyback on the identical in-flight job; its single
+                # execution resolves every attached handle
+                job.handles.append(handle)
+            else:
+                job = _Job(job_key, skey, graph_obj, app_name, make_app,
+                           config, geom, use_dbg, max_iters, path)
+                job.handles.append(handle)
+                self._inflight[job_key] = job
+                self._queue.put(job)
+        self.metrics.record_submit(coalesced)
+        return handle
+
+    def run(self, graph=None, app="pagerank", *, timeout=None, **kw):
+        """Synchronous convenience: submit + wait."""
+        return self.submit(graph, app, **kw).result(timeout=timeout)
+
+    # -- worker ---------------------------------------------------------
+    def _worker_loop(self) -> None:
+        while True:
+            job = self._queue.get()
+            if job is _SENTINEL:
+                return
+            try:
+                self._execute(job)
+            except BaseException as exc:   # never kill the worker
+                self._finish(job, error=exc)
+
+    def _execute(self, job: _Job) -> None:
+        t_pickup = time.perf_counter()
+        t_queue_ms = (t_pickup - job.t_submit) * 1e3
+
+        def builder():
+            if job.graph is None:
+                raise KeyError(
+                    f"store for {job.skey[0][:12]}… was evicted and the "
+                    f"graph is not registered; re-submit with the Graph")
+            return self._build_store(job.graph, job.geom, job.use_dbg)
+
+        # max_iters is a run() argument, not executor state, so it is
+        # deliberately absent from the executor key (unlike the job key)
+        exec_key = (job.skey, job.key[1], job.config.cache_key(), job.path)
+        t0 = time.perf_counter()
+        with self.cache.lease(job.skey, builder) as (store, store_hit):
+            t_store_ms = (time.perf_counter() - t0) * 1e3
+
+            with self._lock:
+                ex = self._executors.get(exec_key)
+                if ex is not None:
+                    self._executors.move_to_end(exec_key)
+            if ex is not None:
+                plan_hit, t_plan_ms = True, 0.0
+            else:
+                plan_hit = store.has_plan(job.config)
+                t0 = time.perf_counter()
+                bundle = store.plan(job.config)
+                t_plan_ms = (time.perf_counter() - t0) * 1e3
+                ex = Executor(store, bundle, job.make_app(),
+                              path=job.path)
+                with self._lock:
+                    self._executors[exec_key] = ex
+                    while len(self._executors) > self.max_executors:
+                        self._executors.popitem(last=False)
+
+            t0 = time.perf_counter()
+            result = ex.run(max_iters=job.max_iters)
+            t_execute_ms = (time.perf_counter() - t0) * 1e3
+
+        self.metrics.record_execution(store_hit, plan_hit)
+        self._finish(job, result=result, store_hit=store_hit,
+                     plan_hit=plan_hit, t_queue_ms=t_queue_ms,
+                     t_store_ms=t_store_ms, t_plan_ms=t_plan_ms,
+                     t_execute_ms=t_execute_ms)
+
+    def _finish(self, job: _Job, result=None, error=None, store_hit=None,
+                plan_hit=None, t_queue_ms=None, t_store_ms=None,
+                t_plan_ms=None, t_execute_ms=None) -> None:
+        # unlink and snapshot the handle list atomically: a twin either
+        # attaches before this (and is resolved below) or finds the job
+        # gone and starts a fresh execution — never lost in between
+        with self._lock:
+            self._inflight.pop(job.key, None)
+            handles = list(job.handles)
+        now = time.perf_counter()
+        for h in handles:
+            m = h.metrics
+            m.store_hit = store_hit
+            m.plan_hit = plan_hit
+            # each handle gets ITS OWN end-to-end latency; the stage
+            # breakdown describes the one execution, so it lands only on
+            # the request that triggered it — coalesced twins keep the
+            # documented None stages (they did not queue/build/run)
+            m.t_total_ms = (now - h._t_submit) * 1e3
+            if not m.coalesced:
+                m.t_queue_ms = t_queue_ms
+                m.t_store_ms = t_store_ms
+                m.t_plan_ms = t_plan_ms
+                m.t_execute_ms = t_execute_ms
+            if error is not None:
+                m.error = "".join(traceback.format_exception_only(
+                    type(error), error)).strip()
+                self.metrics.record_done(m)
+                h._set_exception(error)
+            else:
+                self.metrics.record_done(m)
+                h._set_result(result)
+
+    # -- reporting ------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            n_exec = len(self._executors)
+        return {
+            "service": self.metrics.snapshot(),
+            "store_cache": self.cache.stats(),
+            "registered_graphs": len(self._registry),
+            "cached_executors": n_exec,
+        }
+
+
+def _normalize_app(app: Union[GASApp, str],
+                   app_kwargs: Optional[dict]
+                   ) -> Tuple[str, tuple, "callable"]:
+    """Return (display name, coalescing token, zero-arg factory).
+
+    Builtin apps submitted by name coalesce on (name, kwargs); a
+    prebuilt GASApp instance coalesces only with itself (its parameters
+    live in closures the service can't inspect, and GASApp instances
+    are stateless across runs, so sharing the instance is safe).
+    """
+    if isinstance(app, str):
+        if app not in BUILTIN_APPS:
+            raise ValueError(f"unknown builtin app {app!r}; available: "
+                             f"{sorted(BUILTIN_APPS)}")
+        kwargs = dict(app_kwargs or {})
+        token = ("builtin", app,
+                 tuple((k, _hashable(v)) for k, v in sorted(kwargs.items())))
+        return app, token, lambda: BUILTIN_APPS[app](**kwargs)
+    if app_kwargs:
+        raise ValueError("app_kwargs only apply to builtin app names")
+    return app.name, ("instance", id(app)), lambda: app
+
+
+def _hashable(v):
+    """Coalescing keys must hash; app kwargs may hold numpy arrays
+    (e.g. closeness ``sources``) or lists — fold them to value-equal
+    hashable forms."""
+    if isinstance(v, np.ndarray):
+        return ("ndarray", v.shape, str(v.dtype), v.tobytes())
+    if isinstance(v, (list, tuple)):
+        return tuple(_hashable(x) for x in v)
+    return v
