@@ -1,0 +1,135 @@
+"""Fused (packed-lane) vs per-entry execution — the dispatch-overhead
+scaling wall (ROADMAP perf item; GraphScale/ScalaBFS attribute the same
+wall to per-PE dispatch rather than bandwidth).
+
+For each graph and lane count we build BOTH executors on the SAME
+cached plan and compare:
+
+  * per-iteration wall time, timed INTERLEAVED (A/B/A/B) so slow host
+    drift (CPU contention, thermal) hits both paths equally;
+  * jit trace time + jaxpr size (``trace_stats``) and first-call
+    compile time — the cost the GraphService cold path pays (per-entry
+    is measured first, so any warm-cache bias favours it: the reported
+    fused win is conservative);
+  * kernel/merge dispatch counts (``dispatch_stats``).
+
+Results go to stdout as usual AND to a ``BENCH_fused.json`` artifact
+(one record per (graph, lane count), both paths + derived speedups).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core import gas
+from repro.core.types import Geometry
+from repro.graphs import datasets
+
+from .common import emit, store_for
+
+LANE_COUNTS = (8, 16)
+# Much finer partitioning than the shared benchmark GEOM: the dispatch
+# wall only shows when entries >> lanes (ggs at U=256 is 64 partitions
+# vs 4 at the default U=4096), exactly the regime the ROADMAP item and
+# GraphScale's scaling analysis describe.
+FUSED_GEOM = Geometry(U=256, W=256, T=256, E_BLK=256, big_batch=4)
+
+
+def _prepare(store, app, cfg, fused: bool) -> tuple:
+    """Build + warm one executor; returns (executor, static metrics)."""
+    ex = store.executor(app, cfg, path="ref", fuse_lanes=fused)
+    ex.trace_stats()        # warm tracing-machinery caches (order fairness)
+    tr = ex.trace_stats()
+    t0 = time.perf_counter()
+    ex._iter_fn = ex._build_iteration()
+    vp = ex.init_props()
+    ex._iter_fn(vp, ex.aux, 0).block_until_ready()
+    t_compile = time.perf_counter() - t0
+    d = ex.dispatch_stats()
+    return ex, {
+        "t_trace_ms": tr["t_trace_ms"],
+        "jaxpr_eqns": tr["jaxpr_eqns"],
+        "t_compile_s": t_compile,
+        "kernel_dispatches": d["kernel_dispatches"],
+        "merge_dispatches": d["merge_dispatches"],
+        "num_entries": d["num_entries"],
+        "payload_bytes": d["payload_bytes"],
+    }
+
+
+def _time_interleaved(ex_a, ex_b, repeats: int) -> tuple:
+    """Median per-iteration wall time of two warmed executors, sampled
+    alternately so host-speed drift cancels out of the comparison."""
+    vp_a, vp_b = ex_a.init_props(), ex_b.init_props()
+    ts_a, ts_b = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        ex_a._iter_fn(vp_a, ex_a.aux, 0).block_until_ready()
+        ts_a.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        ex_b._iter_fn(vp_b, ex_b.aux, 0).block_until_ready()
+        ts_b.append(time.perf_counter() - t0)
+    return float(np.median(ts_a)), float(np.median(ts_b))
+
+
+def run(graphs=None, lane_counts=LANE_COUNTS, repeats=5,
+        out_json="BENCH_fused.json"):
+    graphs = graphs or ["ggs", "hws"]
+    records = []
+    for name in graphs:
+        g = datasets.load(name)
+        app = gas.make_pagerank(max_iters=2)
+        store = store_for(g, FUSED_GEOM)
+        for nl in lane_counts:
+            cfg = api.PlanConfig(n_lanes=nl)
+            ex_pe, per_entry = _prepare(store, app, cfg, fused=False)
+            ex_f, fused = _prepare(store, app, cfg, fused=True)
+            t_pe, t_f = _time_interleaved(ex_pe, ex_f, repeats)
+            per_entry["t_iteration_s"] = t_pe
+            fused["t_iteration_s"] = t_f
+            # one plan deep: drop this config's device payloads (both
+            # forms) before the next lane count materializes its own
+            ex_pe = ex_f = None
+            store.clear_plans()
+            rec = {
+                "graph": name, "V": g.num_vertices, "E": g.num_edges,
+                "n_lanes": nl,
+                "fused": fused, "per_entry": per_entry,
+                "iteration_speedup": t_pe / max(t_f, 1e-12),
+                "trace_speedup":
+                    per_entry["t_trace_ms"]
+                    / max(fused["t_trace_ms"], 1e-12),
+                "compile_speedup":
+                    per_entry["t_compile_s"]
+                    / max(fused["t_compile_s"], 1e-12),
+                "dispatch_reduction":
+                    per_entry["kernel_dispatches"]
+                    / max(fused["kernel_dispatches"], 1),
+            }
+            records.append(rec)
+            emit(f"fused.{name}.lanes{nl}.iter", t_f * 1e6,
+                 f"speedup={rec['iteration_speedup']:.2f}x "
+                 f"(per_entry={t_pe * 1e6:.0f}us)")
+            emit(f"fused.{name}.lanes{nl}.trace",
+                 fused["t_trace_ms"] * 1e3,
+                 f"eqns={fused['jaxpr_eqns']} vs "
+                 f"{per_entry['jaxpr_eqns']} "
+                 f"trace_speedup={rec['trace_speedup']:.2f}x "
+                 f"compile_speedup={rec['compile_speedup']:.2f}x")
+            emit(f"fused.{name}.lanes{nl}.dispatch", 0.0,
+                 f"kernel={fused['kernel_dispatches']} vs "
+                 f"{per_entry['kernel_dispatches']} "
+                 f"(entries={per_entry['num_entries']})")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"benchmark": "fused_vs_per_entry",
+                       "records": records}, f, indent=2)
+        emit("fused.artifact", 0.0, out_json)
+    return records
+
+
+if __name__ == "__main__":
+    run()

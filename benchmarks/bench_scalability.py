@@ -2,7 +2,10 @@
 
 Makespan = max over lanes of measured lane time. The paper observes
 near-linear scaling on regular graphs and saturation on small/irregular
-ones (partition-switch overhead) — we report the same speedup curve.
+ones (partition-switch overhead) — we report the same speedup curve,
+for BOTH execution paths: fused (one packed launch per lane) and
+per-entry (one launch per materialized entry — the dispatch overhead
+that grows with lane count, since more lanes means more entry splits).
 One GraphStore per graph serves every lane count in the sweep.
 """
 from __future__ import annotations
@@ -23,18 +26,29 @@ def run(graphs=("r16s", "g17s", "ggs"), lane_counts=(1, 2, 4, 8, 16)):
         hw, _ = cpu_calibrated_hw(store, app)
         base = None
         for nl in lane_counts:
-            ex = store.executor(app, api.PlanConfig(n_lanes=nl, hw=hw),
-                                path="ref")
+            cfg = api.PlanConfig(n_lanes=nl, hw=hw)
+            ex = store.executor(app, cfg, path="ref")
             lt = ex.time_lanes(repeats=2)
-            # each lane count materializes its own device entries; drop
-            # them so the sweep's peak memory stays one-plan-deep
+            # drop the fused executor AND its plan before the per-entry
+            # form materializes (and again after), so the sweep's peak
+            # memory stays one payload-form deep — clear_plans() alone
+            # can't free a bundle an executor still references; the plan
+            # rebuild in between costs milliseconds
+            ex = None
+            store.clear_plans()
+            ex_pe = store.executor(app, cfg, path="ref", fuse_lanes=False)
+            lt_pe = ex_pe.time_lanes(repeats=2)
+            ex_pe = None
             store.clear_plans()
             t = max(lt) if lt else 0.0
+            t_pe = max(lt_pe) if lt_pe else 0.0
             base = base or t
             out[(name, nl)] = t
             emit(f"fig12.{name}.lanes{nl}", t * 1e6,
                  f"speedup={base / max(t, 1e-12):.2f}x "
-                 f"mteps={mteps(g, max(t, 1e-12)):.0f}")
+                 f"mteps={mteps(g, max(t, 1e-12)):.0f} "
+                 f"per_entry={t_pe * 1e6:.0f}us "
+                 f"fused_gain={t_pe / max(t, 1e-12):.2f}x")
     return out
 
 

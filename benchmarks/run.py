@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV lines (see benchmarks/common.emit).
   Tab. V   bench_sota           vs monolithic (ThunderGP-like) baseline
   Fig. 13  bench_roofline       resource-centric roofline analogue
   —        bench_serving        GraphService throughput/latency/caching
+  —        bench_fused          fused vs per-entry execution (+ JSON)
 """
 from __future__ import annotations
 
@@ -19,7 +20,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: pipelines,heterogeneity,scalability,"
-                         "preprocessing,amortization,sota,roofline,serving")
+                         "preprocessing,amortization,sota,roofline,serving,"
+                         "fused")
     ap.add_argument("--quick", action="store_true",
                     help="smaller graph set (CI-speed)")
     ap.add_argument("--smoke", action="store_true",
@@ -30,7 +32,7 @@ def main() -> None:
     want = (None if args.only == "all"
             else set(args.only.split(",")))
 
-    from . import (bench_heterogeneity, bench_pipelines,
+    from . import (bench_fused, bench_heterogeneity, bench_pipelines,
                    bench_preprocessing, bench_roofline, bench_scalability,
                    bench_serving, bench_sota)
 
@@ -59,6 +61,12 @@ def main() -> None:
             n_lanes=4 if args.quick else 8)),
         # --quick has no mid tier for serving; it gets the smoke sizes
         ("serving", lambda: bench_serving.run(smoke=args.quick)),
+        # acceptance target: >= 8 lanes even on the quick graph set (the
+        # dispatch wall only shows at high entry counts)
+        ("fused", lambda: bench_fused.run(
+            graphs=["ggs"] if args.quick else ["ggs", "hws", "r16s"],
+            lane_counts=(8,) if args.quick else (8, 16),
+            repeats=3 if args.quick else 5)),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

@@ -103,6 +103,7 @@ def compile(
     store: Optional[GraphStore] = None,
     path: Optional[str] = None,
     use_dbg: Optional[bool] = None,
+    fuse_lanes: bool = True,
     **cfg,
 ) -> CompiledApp:
     """Push-button entry point: prepare (or reuse) a GraphStore, plan,
@@ -113,6 +114,9 @@ def compile(
     :class:`PlanConfig` fields (``n_lanes``, ``mode``, ``hw``,
     ``forced_little``, ``forced_big``). Pass ``store=`` to amortize
     preprocessing across apps; ``graph`` may then be None.
+    ``fuse_lanes=False`` disables the packed-lane execution path (one
+    kernel launch per plan entry instead of one per lane; bit-identical
+    results — see README §Performance).
     """
     if isinstance(app, str):
         if app not in BUILTIN_APPS:
@@ -132,4 +136,5 @@ def compile(
         # a shared store fixes graph/geometry/DBG — reject contradictions
         store.validate_compatible(graph=graph, geom=geom, use_dbg=use_dbg)
     return CompiledApp(store=store,
-                       executor=store.executor(app, config, path=path))
+                       executor=store.executor(app, config, path=path,
+                                               fuse_lanes=fuse_lanes))

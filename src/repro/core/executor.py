@@ -1,11 +1,19 @@
 """Executor — per-(plan, app) materialization and the jit'd run loop.
 
 The Executor is the only layer that touches the device: it turns the
-plan's lane queues into device-resident entry payloads, builds the jit'd
+plan's lane queues into device-resident payloads, builds the jit'd
 iteration (Scatter+Gather kernels → merge → Apply), and owns ``run`` /
 ``time_iteration`` / ``time_lanes``. The store's aux (out-degrees etc.)
 is shared across every Executor on the same store, so running five apps
 re-uploads nothing app-independent.
+
+Execution is FUSED by default: each lane is one packed payload run as a
+single ``pallas_call`` (``kernels.ops.run_lane``) and the per-iteration
+merge is one tile-indexed scatter-set over all lanes' output tiles —
+kernel dispatches and trace size scale with the number of lanes, not
+the number of materialized plan entries. ``fuse_lanes=False`` restores
+the one-launch-per-entry path (bit-identical results; useful for A/B
+benchmarks and for debugging a single entry).
 """
 from __future__ import annotations
 
@@ -39,48 +47,104 @@ def init_props(store, app: GASApp):
     return jnp.asarray(full)
 
 
+def _sub_jaxprs(v):
+    """Yield every jaxpr held by one eqn param value: raw Jaxpr,
+    ClosedJaxpr, or tuples/lists of either (lax.cond's ``branches``)."""
+    if hasattr(v, "eqns"):                        # raw Jaxpr
+        yield v
+    elif hasattr(getattr(v, "jaxpr", None), "eqns"):
+        yield v.jaxpr                             # ClosedJaxpr
+    elif isinstance(v, (tuple, list)):
+        for x in v:
+            yield from _sub_jaxprs(x)
+
+
+def _count_jaxpr_eqns(jaxpr) -> int:
+    """Total equations including nested (pjit / pallas / cond branch)
+    sub-jaxprs — the trace-size measure the fused path collapses."""
+    n = len(jaxpr.eqns)
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                n += _count_jaxpr_eqns(sub)
+    return n
+
+
 class Executor:
     def __init__(self, store, bundle: PlanBundle, app: GASApp,
-                 path: Optional[str] = None):
+                 path: Optional[str] = None, fuse_lanes: bool = True):
         self.store = store
         self.bundle = bundle
         self.app = app
         self.geom = store.geom
         self.path = path or ops.default_path()
         self.V_pad = store.V_pad
+        self.fuse_lanes = bool(fuse_lanes)
 
         t0 = time.perf_counter()
-        # shared across every app on this plan (memoized on the bundle)
-        self.lane_entries: List[List[dict]] = bundle.lane_entries()
+        # shared across every app on this plan (memoized on the bundle);
+        # only the form this executor runs is materialized
+        if self.fuse_lanes:
+            self.packed_lanes: List[List[dict]] = bundle.packed_lanes()
+            self._payloads = [p for lane in self.packed_lanes for p in lane]
+        else:
+            self.packed_lanes = None
+            self._payloads = [p for lane in bundle.lane_entries()
+                              for p in lane]
         self.t_materialize = time.perf_counter() - t0
 
         self.aux = store.aux
         self._iter_fn = None
+        self._lane_fns = None   # cached per-lane jits for time_lanes
 
     @property
     def plan(self):
         return self.bundle.plan
+
+    @property
+    def lane_entries(self) -> List[List[dict]]:
+        """Per-entry payloads (legacy surface; the fused executor only
+        materializes these on first access)."""
+        return self.bundle.lane_entries()
 
     # ------------------------------------------------------------------
     @property
     def accum_dtype(self):
         return jnp.int32 if self.app.gather == "or" else jnp.float32
 
-    def _build_iteration(self):
-        app, geom, path = self.app, self.geom, self.path
-        entries = [p for lane in self.lane_entries for p in lane]
+    def _run_payload(self, payload, vprops):
+        """Dispatch one device payload (packed lane or single entry)."""
+        run = ops.run_lane if self.fuse_lanes else ops.run_entry
+        return run(payload, vprops, self.app.scatter, self.app.gather,
+                   self.path)
+
+    def _iteration_fn(self):
+        """The raw (un-jitted) one-iteration function — separate from
+        :meth:`_build_iteration` so trace-size reporting can inspect the
+        jaxpr without a compiled-call wrapper in the way.
+
+        Both paths share the SAME single ``merge_all`` (one tile-indexed
+        scatter-set over every payload's output tiles) and differ only
+        in kernel-launch granularity — one launch per packed lane vs one
+        per entry. Keeping the merge+apply region structurally identical
+        is what makes the two paths bit-identical: XLA re-fuses
+        value-equal scatter chains differently per program shape, which
+        shows up as 1-ULP drift in 'sum' apps."""
+        app, geom = self.app, self.geom
+        payloads = self._payloads
         ident = GATHER_IDENTITY[app.gather]
         dt = self.accum_dtype
 
         def iteration(vprops, aux, it):
             accum = jnp.full((self.V_pad,), ident, dt)
-            for p in entries:
-                tiles, idx = ops.run_entry(p, vprops, app.scatter, app.gather,
-                                           path)
-                accum = ops.merge_tiles(accum, tiles, idx, geom.T)
+            outs = [self._run_payload(p, vprops) for p in payloads]
+            accum = ops.merge_all(accum, outs, geom.T)
             return app.apply(accum, vprops, aux, it)
 
-        return jax.jit(iteration)
+        return iteration
+
+    def _build_iteration(self):
+        return jax.jit(self._iteration_fn())
 
     def init_props(self):
         return init_props(self.store, self.app)
@@ -121,29 +185,40 @@ class Executor:
             ts.append(time.perf_counter() - t0)
         return float(np.median(ts))
 
-    def time_lanes(self, repeats: int = 3):
-        """Per-lane wall times — the quantity the scheduler balances.
-        On real hardware lanes run concurrently; on the host we time them
-        one by one and report max() as the modelled makespan analogue."""
-        app, geom, path = self.app, self.geom, self.path
-        ident = GATHER_IDENTITY[app.gather]
+    def _build_lane_fns(self):
+        """One jitted fn per lane, built once and cached for the life of
+        the executor (same lifetime as ``_iter_fn``) — repeated
+        ``time_lanes`` sweeps must not pay a re-trace per call."""
+        ident = GATHER_IDENTITY[self.app.gather]
         dt = self.accum_dtype
-        vprops = self.init_props()
-        out = []
-        for lane in self.lane_entries:
+        lanes = (self.packed_lanes if self.fuse_lanes
+                 else self.bundle.lane_entries())
+        fns = []
+        for lane in lanes:
             if not lane:
-                out.append(0.0)
+                fns.append(None)
                 continue
 
             def lane_fn(vp, lane=lane):
                 accum = jnp.full((self.V_pad,), ident, dt)
-                for p in lane:
-                    tiles, idx = ops.run_entry(p, vp, app.scatter, app.gather,
-                                               path)
-                    accum = ops.merge_tiles(accum, tiles, idx, geom.T)
-                return accum
+                outs = [self._run_payload(p, vp) for p in lane]
+                return ops.merge_all(accum, outs, self.geom.T)
 
-            f = jax.jit(lane_fn)
+            fns.append(jax.jit(lane_fn))
+        return fns
+
+    def time_lanes(self, repeats: int = 3):
+        """Per-lane wall times — the quantity the scheduler balances.
+        On real hardware lanes run concurrently; on the host we time them
+        one by one and report max() as the modelled makespan analogue."""
+        if self._lane_fns is None:
+            self._lane_fns = self._build_lane_fns()
+        vprops = self.init_props()
+        out = []
+        for f in self._lane_fns:
+            if f is None:
+                out.append(0.0)
+                continue
             f(vprops).block_until_ready()
             ts = []
             for _ in range(repeats):
@@ -153,8 +228,48 @@ class Executor:
             out.append(float(np.median(ts)))
         return out
 
+    # ------------------------------------------------------------------
+    def memory_footprint(self) -> int:
+        """Device bytes pinned by this executor's payloads. NOTE:
+        payloads are memoized on the bundle, so executors sharing a plan
+        share these bytes — treat this as an attribution for cache
+        budgeting, not an exclusive-ownership measure."""
+        return sum(ops.payload_nbytes(p) for p in self._payloads)
+
+    def dispatch_stats(self) -> dict:
+        """Static launch accounting: what one iteration dispatches. The
+        fused path turns O(entries) kernel launches + merges into
+        O(lanes) launches + ONE merge — the per-entry numbers are
+        reported alongside so callers can see the delta."""
+        num_entries = sum(p["n_entries"] for p in self._payloads)
+        return {
+            "fuse_lanes": self.fuse_lanes,
+            "num_entries": num_entries,
+            "kernel_dispatches": len(self._payloads),
+            "merge_dispatches": 1 if self._payloads else 0,
+            "payload_bytes": self.memory_footprint(),
+        }
+
+    def trace_stats(self) -> dict:
+        """Abstractly trace one iteration and measure the jaxpr — the
+        trace/compile-size cost the fused path collapses. Traces fresh
+        on every call (no caching) so fused/per-entry A/Bs are honest;
+        don't call it on a hot path."""
+        fn = self._iteration_fn()
+        vprops = self.init_props()
+        t0 = time.perf_counter()
+        jaxpr = jax.make_jaxpr(fn)(vprops, self.aux, 0)
+        t_trace = time.perf_counter() - t0
+        return {
+            "jaxpr_eqns": _count_jaxpr_eqns(jaxpr.jaxpr),
+            "t_trace_ms": t_trace * 1e3,
+        }
+
     def stats(self) -> dict:
         b, store = self.bundle, self.store
+        padded_edges = sum(p["n_blocks"] for p in self._payloads) \
+            * self.geom.E_BLK
+        real_edges = sum(p["num_real_edges"] for p in self._payloads)
         return {
             "V": store.graph.num_vertices, "E": store.graph.num_edges,
             "partitions": len(b.infos),
@@ -168,4 +283,10 @@ class Executor:
             "t_partition_schedule_ms":
                 (store.t_partition + b.t_block + b.t_plan) * 1e3,
             "t_plan_ms": b.t_plan * 1e3,
+            # padding efficiency of the brick layout actually executed
+            "num_real_edges": real_edges,
+            "num_padded_edges": padded_edges,
+            "padding_efficiency": (real_edges / padded_edges
+                                   if padded_edges else 1.0),
+            **self.dispatch_stats(),
         }

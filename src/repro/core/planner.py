@@ -117,6 +117,8 @@ class PlanBundle:
                                              # (cache hits cost 0)
     _lane_entries: Optional[list] = dataclasses.field(
         default=None, repr=False, compare=False)
+    _packed_lanes: Optional[list] = dataclasses.field(
+        default=None, repr=False, compare=False)
     _mat_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
 
@@ -141,6 +143,41 @@ class PlanBundle:
                 self._lane_entries = ops.materialize_lanes(
                     self.plan, self.little_works, self.big_works)
             return self._lane_entries
+
+    def packed_lanes(self) -> list:
+        """Fused device payloads: one packed payload per (lane, kind)
+        instead of one per entry (see ``kernels.ops.pack_lanes``).
+        Memoized exactly like :meth:`lane_entries` — and independently
+        of it, so a fused-only workload never pays for (or pins) the
+        per-entry materialization."""
+        with self._mat_lock:
+            if self._packed_lanes is None:
+                from ..kernels import ops
+                self._packed_lanes = ops.pack_lanes(
+                    self.plan, self.little_works, self.big_works)
+            return self._packed_lanes
+
+    def device_bytes(self) -> dict:
+        """Device bytes pinned by whichever payload forms this bundle
+        has materialized so far (feeds the store's plan-cache byte
+        accounting and the serving executor LRU's budget).
+
+        Deliberately lock-free: callers reach here while holding the
+        store's plan lock (``memory_footprint``), and taking
+        ``_mat_lock`` would stall every ``plan()`` behind an in-flight
+        materialization. Snapshot reads of the memoized lists are safe —
+        they flip once from None to an immutable value."""
+        from ..kernels import ops
+        out = {"entry_bytes": 0, "packed_bytes": 0}
+        entries, packed = self._lane_entries, self._packed_lanes
+        if entries is not None:
+            out["entry_bytes"] = sum(
+                ops.payload_nbytes(p) for lane in entries for p in lane)
+        if packed is not None:
+            out["packed_bytes"] = sum(
+                ops.payload_nbytes(p) for lane in packed for p in lane)
+        out["total_bytes"] = out["entry_bytes"] + out["packed_bytes"]
+        return out
 
 
 class Planner:

@@ -192,11 +192,14 @@ class GraphStore:
             self._plan_cache.clear()
         return n
 
-    def executor(self, app, config=None, path: Optional[str] = None):
+    def executor(self, app, config=None, path: Optional[str] = None,
+                 fuse_lanes: bool = True):
         """Materialize an :class:`~.executor.Executor` for one app on the
-        (cached) plan for ``config``."""
+        (cached) plan for ``config``. ``fuse_lanes=False`` falls back to
+        one kernel launch per materialized plan entry (debug/AB path)."""
         from .executor import Executor
-        return Executor(self, self.plan(config), app, path=path)
+        return Executor(self, self.plan(config), app, path=path,
+                        fuse_lanes=fuse_lanes)
 
     def plan_and_run(self, app, config=None, path: Optional[str] = None,
                      max_iters: Optional[int] = None,
@@ -265,16 +268,10 @@ def _blocked_nbytes(w) -> int:
 
 def _bundle_nbytes(bundle) -> int:
     """Bytes a cached PlanBundle pins BEYOND the store's own caches:
-    its materialized device-side lane entries (the blockings it
-    references are the store's memoized ones, counted once there).
-    Un-materialized bundles pin ~nothing."""
-    entries = getattr(bundle, "_lane_entries", None)
-    if not entries:
+    its materialized device-side payloads, per-entry AND packed (the
+    blockings it references are the store's memoized ones, counted once
+    there). Un-materialized bundles pin ~nothing."""
+    device_bytes = getattr(bundle, "device_bytes", None)
+    if device_bytes is None:
         return 0
-    total = 0
-    for lane in entries:
-        for payload in lane:
-            for v in payload.values():
-                if hasattr(v, "nbytes"):
-                    total += int(v.nbytes)
-    return total
+    return int(device_bytes()["total_bytes"])

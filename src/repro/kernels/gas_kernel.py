@@ -151,3 +151,42 @@ def gas_pallas_call(vwin, src_local, dst_local, weights, valid,
         interpret=interpret,
     )(window_id, tile_id, tile_first, vwin, src_local, dst_local,
       weights, valid)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scatter_fn", "mode", "e_blk", "w", "t", "n_out_tiles",
+                     "n_segments", "interpret"),
+)
+def gas_pallas_call_segmented(vwin, src_local, dst_local, weights, valid,
+                              window_id, tile_id, tile_first, *,
+                              scatter_fn, mode, e_blk, w, t, n_out_tiles,
+                              n_segments, interpret=True):
+    """One grid over the concatenation of ``n_segments`` tile-disjoint
+    block ranges (a packed lane) — the fused alternative to issuing one
+    :func:`gas_pallas_call` per plan entry.
+
+    The kernel body is shared with the per-entry call; the segment
+    structure is carried entirely by the prefetch maps, which packing
+    (``ops.pack_lane``) establishes and validates host-side:
+
+      * each segment's first block has ``tile_first == 1``, so the VMEM
+        accumulator re-initializes exactly at segment boundaries;
+      * local tile ids are rebased to be strictly increasing across
+        segments (globally disjoint output rows), so the flush check
+        (next block's ``tile_first``) closes a segment's last tile
+        precisely when the next segment begins;
+      * ``window_id`` is rebased against the packed window table (raw
+        vprops windows for Little; the concatenated unique-source
+        compaction tables for Big).
+
+    ``n_segments`` is static so fused and per-entry launches of the same
+    shape trace separately (dispatch accounting stays honest); the body
+    itself only depends on the total block count.
+    """
+    del n_segments  # static trace identity only — see docstring
+    return gas_pallas_call(
+        vwin, src_local, dst_local, weights, valid,
+        window_id, tile_id, tile_first,
+        scatter_fn=scatter_fn, mode=mode, e_blk=e_blk, w=w, t=t,
+        n_out_tiles=n_out_tiles, interpret=interpret)

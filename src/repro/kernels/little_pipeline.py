@@ -10,7 +10,7 @@ windows are never fetched.
 """
 from __future__ import annotations
 
-from .gas_kernel import gas_pallas_call
+from .gas_kernel import gas_pallas_call, gas_pallas_call_segmented
 
 
 def little_pipeline(vprops_padded, src_local, dst_local, weights, valid,
@@ -30,3 +30,22 @@ def little_pipeline(vprops_padded, src_local, dst_local, weights, valid,
         scatter_fn=scatter_fn, mode=mode,
         e_blk=geom.E_BLK, w=geom.W, t=geom.T, n_out_tiles=n_out_tiles,
         interpret=interpret)
+
+
+def little_pipeline_packed(vprops_padded, src_local, dst_local, weights,
+                           valid, window_id, tile_id, tile_first, *,
+                           scatter_fn, mode, geom, n_out_tiles, n_segments,
+                           interpret=True):
+    """Run a whole packed Little lane (all dense entries of one lane,
+    concatenated by ops.pack_lane) as ONE segmented grid. Window ids
+    index the raw vprops windows, so packing needs no rebase here —
+    every segment streams from the same source array.
+    Returns (n_out_tiles, T) accumulator tiles for the whole lane.
+    """
+    vwin = vprops_padded.reshape(-1, geom.W)
+    return gas_pallas_call_segmented(
+        vwin, src_local, dst_local, weights, valid,
+        window_id, tile_id, tile_first,
+        scatter_fn=scatter_fn, mode=mode,
+        e_blk=geom.E_BLK, w=geom.W, t=geom.T, n_out_tiles=n_out_tiles,
+        n_segments=n_segments, interpret=interpret)

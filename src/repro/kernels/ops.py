@@ -6,13 +6,22 @@ snapping the range to tile boundaries — so every destination tile is
 written by exactly one entry and the engine can merge with a plain
 scatter-set regardless of gather mode.
 
+``pack_lane`` / ``pack_lanes`` build the FUSED representation: all
+same-kind entries of a lane concatenated host-side into one contiguous
+payload (per-segment tile ids rebased to a global tile map, Big window
+ids rebased against the packed unique-source tables), uploaded in one
+shot. ``run_lane`` then executes an entire lane as ONE ``pallas_call``
+(one ref-path call on CPU) instead of one launch per entry, so kernel
+dispatches and trace size scale with the number of lanes, not the
+number of materialized plan entries.
+
 ``run_entry`` dispatches to the Pallas kernel (interpret=True on CPU,
 compiled on TPU) or the pure-jnp reference path — identical math, used
 both as the CPU fast path and as the oracle.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,8 +29,15 @@ import numpy as np
 
 from ..core.types import BlockedEdges, Geometry
 from . import ref as ref_mod
-from .big_pipeline import big_pipeline
-from .little_pipeline import little_pipeline
+from .big_pipeline import big_pipeline, big_pipeline_packed
+from .little_pipeline import little_pipeline, little_pipeline_packed
+
+# payload keys that hold per-block / per-tile arrays and concatenate
+# along axis 0 when packing a lane
+_CONCAT_KEYS = ("src_local", "dst_local", "weights", "valid",
+                "window_id", "tile_id", "tile_first", "tile_idx")
+# payload keys uploaded to the device by _upload_payload
+_DEVICE_KEYS = _CONCAT_KEYS + ("unique_src",)
 
 
 def default_path() -> str:
@@ -47,37 +63,52 @@ def snap_to_tiles(blocked: BlockedEdges, lo: int, hi: int):
     return snap_down(blocked, lo), snap_down(blocked, hi)
 
 
-def materialize_entry(blocked: BlockedEdges, lo: int, hi: int):
-    """Build the device payload for one plan entry (tile-snapped).
-    Returns None when the snapped range is empty."""
+def _entry_np(blocked: BlockedEdges, lo: int, hi: int) -> Optional[dict]:
+    """Host-side payload for one plan entry (tile-snapped). Returns None
+    when the snapped range is empty. ``unique_src`` stays a reference to
+    the work's shared compaction table so packing can deduplicate tables
+    across entries of the same Big work."""
     lo, hi = snap_to_tiles(blocked, lo, hi)
     if hi <= lo:
         return None
     t0 = int(blocked.tile_id[lo])
-    t1 = int(blocked.tile_id[hi - 1]) + 1 if hi > lo else t0
-    tile_id = blocked.tile_id[lo:hi] - t0
+    t1 = int(blocked.tile_id[hi - 1]) + 1
     tf = blocked.tile_first[lo:hi].copy()
-    if tf.shape[0]:
-        tf[0] = 1
-    payload = {
+    tf[0] = 1
+    return {
         "kind": blocked.kind,
         "geom": blocked.geom,
         "n_out_tiles": t1 - t0,
-        "src_local": jnp.asarray(blocked.src_local[lo:hi]),
-        "dst_local": jnp.asarray(blocked.dst_local[lo:hi]),
-        "weights": jnp.asarray(blocked.weights[lo:hi]),
-        "valid": jnp.asarray(blocked.valid[lo:hi], jnp.int32),
-        "window_id": jnp.asarray(blocked.window_id[lo:hi]),
-        "tile_id": jnp.asarray(tile_id),
-        "tile_first": jnp.asarray(tf),
-        "tile_idx": jnp.asarray(blocked.tile_dst_start[t0:t1]
-                                // blocked.geom.T),
-        "unique_src": (None if blocked.unique_src is None
-                       else jnp.asarray(blocked.unique_src)),
         "n_blocks": hi - lo,
+        "n_entries": 1,
+        "src_local": blocked.src_local[lo:hi],
+        "dst_local": blocked.dst_local[lo:hi],
+        "weights": blocked.weights[lo:hi],
+        "valid": blocked.valid[lo:hi].astype(np.int32),
+        "window_id": blocked.window_id[lo:hi],
+        "tile_id": blocked.tile_id[lo:hi] - t0,
+        "tile_first": tf,
+        "tile_idx": (blocked.tile_dst_start[t0:t1]
+                     // blocked.geom.T).astype(np.int32),
+        "unique_src": blocked.unique_src,
         "num_real_edges": int(blocked.valid[lo:hi].sum()),
     }
-    return payload
+
+
+def _upload_payload(p: dict) -> dict:
+    """Move a host payload's array fields to the device (jnp)."""
+    out = dict(p)
+    for k in _DEVICE_KEYS:
+        if out.get(k) is not None:
+            out[k] = jnp.asarray(out[k])
+    return out
+
+
+def materialize_entry(blocked: BlockedEdges, lo: int, hi: int):
+    """Build the device payload for one plan entry (tile-snapped).
+    Returns None when the snapped range is empty."""
+    p = _entry_np(blocked, lo, hi)
+    return None if p is None else _upload_payload(p)
 
 
 def materialize_lanes(plan, little_works, big_works):
@@ -97,6 +128,134 @@ def materialize_lanes(plan, little_works, big_works):
         lanes.append(mat)
     return lanes
 
+
+# ---------------------------------------------------------------------------
+# Packed (fused) lane payloads
+# ---------------------------------------------------------------------------
+
+def _pack_group(entries: List[dict]) -> dict:
+    """Concatenate same-kind host entry payloads into one packed payload.
+
+    Per-segment rebasing:
+      * ``tile_id`` shifts by the running tile count, so packed local
+        tile ids are strictly increasing across segments and the global
+        ``tile_idx`` map is a plain concatenation;
+      * Big ``window_id`` shifts by its work's offset in the packed
+        unique-source table (tables shared by split entries of the same
+        work are packed once); Little window ids index raw vprops
+        windows and need no rebase.
+    """
+    kind, geom = entries[0]["kind"], entries[0]["geom"]
+    tile_off = 0
+    win_parts, tid_parts = [], []
+    tables: List[np.ndarray] = []        # distinct tables, first-use order
+    table_off: dict = {}                 # id(table) -> window offset
+    n_windows = 0
+    for e in entries:
+        assert e["kind"] == kind and e["geom"] == geom
+        tid_parts.append(e["tile_id"] + tile_off)
+        tile_off += e["n_out_tiles"]
+        if kind == "big":
+            tab = e["unique_src"]
+            off = table_off.get(id(tab))
+            if off is None:
+                off = n_windows
+                table_off[id(tab)] = off
+                tables.append(tab)
+                n_windows += tab.shape[0] // geom.W
+            win_parts.append(e["window_id"] + off)
+        else:
+            win_parts.append(e["window_id"])
+    packed = {
+        "kind": kind,
+        "geom": geom,
+        "n_out_tiles": tile_off,
+        "n_blocks": int(sum(e["n_blocks"] for e in entries)),
+        "n_entries": len(entries),
+        "segment_starts": np.cumsum(
+            [0] + [e["n_blocks"] for e in entries])[:-1].astype(np.int64),
+        "tile_id": np.concatenate(tid_parts).astype(np.int32),
+        "window_id": np.concatenate(win_parts).astype(np.int32),
+        "unique_src": (np.concatenate(tables) if kind == "big" else None),
+        "num_real_edges": int(sum(e["num_real_edges"] for e in entries)),
+    }
+    for k in ("src_local", "dst_local", "weights", "valid", "tile_first",
+              "tile_idx"):
+        packed[k] = np.concatenate([e[k] for e in entries])
+    _validate_packed(packed)
+    return packed
+
+
+def _validate_packed(p: dict) -> None:
+    """Pack-time invariants the segmented grid relies on (host numpy —
+    zero device cost). Violations mean a scheduling/packing bug, not bad
+    user input, hence asserts."""
+    starts = p["segment_starts"]
+    # every segment opens a fresh tile -> the VMEM accumulator re-inits
+    assert np.all(p["tile_first"][starts] == 1), \
+        "packed segment does not start on a tile boundary"
+    # local tile ids are a 0..n_out_tiles-1 relabeling, non-decreasing
+    tid = p["tile_id"]
+    assert tid.shape[0] == 0 or (
+        tid[0] == 0 and np.all(np.diff(tid) >= 0)
+        and int(tid[-1]) + 1 == p["n_out_tiles"]), \
+        "packed tile ids are not a dense non-decreasing relabeling"
+    # entries write disjoint output tiles -> one scatter-set merge is safe
+    idx = p["tile_idx"]
+    assert np.unique(idx).shape[0] == idx.shape[0], \
+        "packed entries write overlapping destination tiles"
+
+
+def _pack_lane_np(lane, little_works, big_works) -> List[dict]:
+    """Host-side packed payloads for one lane: at most one per kind (a
+    lane may mix Little and Big entries when there are fewer lanes than
+    pipeline classes). Returns [] for a fully snapped-away lane."""
+    groups = {"little": [], "big": []}
+    for e in lane:
+        work = (little_works[e.work_id] if e.kind == "little"
+                else big_works[e.work_id])
+        p = _entry_np(work, e.block_lo, e.block_hi)
+        if p is not None:
+            groups[e.kind].append(p)
+    return [_pack_group(g) for g in (groups["little"], groups["big"]) if g]
+
+
+def pack_lane(lane, little_works, big_works) -> List[dict]:
+    """Pack one lane's plan entries into at most two device payloads:
+    materialized host-side, concatenated, validated, uploaded once."""
+    return [_upload_payload(p)
+            for p in _pack_lane_np(lane, little_works, big_works)]
+
+
+def pack_lanes(plan, little_works, big_works) -> List[List[dict]]:
+    """Fused counterpart of :func:`materialize_lanes`: one packed payload
+    per (lane, kind) instead of one payload per entry."""
+    host = [_pack_lane_np(lane, little_works, big_works)
+            for lane in plan.lanes]
+    # merge_all's single scatter-set needs tile disjointness ACROSS
+    # payloads too (duplicate scatter indices have an unspecified
+    # winner in XLA); _validate_packed only covers within-payload.
+    # Checked on the host copies, before anything is uploaded.
+    idx = [p["tile_idx"] for lane in host for p in lane]
+    all_idx = np.concatenate(idx) if idx else np.zeros(0, np.int32)
+    assert np.unique(all_idx).shape[0] == all_idx.shape[0], \
+        "plan assigns the same destination tile to multiple lanes"
+    return [[_upload_payload(p) for p in lane] for lane in host]
+
+
+def payload_nbytes(payload: dict) -> int:
+    """Device bytes pinned by one (entry or packed) payload."""
+    total = 0
+    for k in _DEVICE_KEYS:
+        v = payload.get(k)
+        if v is not None and hasattr(v, "nbytes"):
+            total += int(v.nbytes)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
 
 def run_entry(entry: dict, vprops_padded, scatter_fn, mode: str,
               path: Optional[str] = None):
@@ -129,9 +288,50 @@ def run_entry(entry: dict, vprops_padded, scatter_fn, mode: str,
     return tiles, entry["tile_idx"]
 
 
+def run_lane(packed: dict, vprops_padded, scatter_fn, mode: str,
+             path: Optional[str] = None):
+    """Execute one packed lane payload (all same-kind entries of a lane)
+    as a single kernel launch. Same contract as :func:`run_entry`:
+    returns (tiles (n_out_tiles, T), tile_idx (n_out_tiles,))."""
+    path = path or default_path()
+    geom: Geometry = packed["geom"]
+    args = (packed["src_local"], packed["dst_local"], packed["weights"],
+            packed["valid"], packed["window_id"], packed["tile_id"],
+            packed["tile_first"])
+    if path == "ref":
+        if packed["kind"] == "big":
+            vwin = vprops_padded[packed["unique_src"]].reshape(-1, geom.W)
+        else:
+            vwin = vprops_padded.reshape(-1, geom.W)
+        tiles = ref_mod.gas_ref(vwin, *args, scatter_fn=scatter_fn, mode=mode,
+                                t=geom.T, n_out_tiles=packed["n_out_tiles"])
+    else:
+        interpret = jax.default_backend() != "tpu"
+        kw = dict(scatter_fn=scatter_fn, mode=mode, geom=geom,
+                  n_out_tiles=packed["n_out_tiles"],
+                  n_segments=packed["n_entries"], interpret=interpret)
+        if packed["kind"] == "big":
+            tiles = big_pipeline_packed(vprops_padded, packed["unique_src"],
+                                        *args, **kw)
+        else:
+            tiles = little_pipeline_packed(vprops_padded, *args, **kw)
+    return tiles, packed["tile_idx"]
+
+
 def merge_tiles(accum_padded, tiles, tile_idx, t: int):
     """Scatter-set entry results into the global accumulator. Tiles are
     disjoint across entries by construction (snap_to_tiles)."""
     acc = accum_padded.reshape(-1, t)
     acc = acc.at[tile_idx].set(tiles.astype(acc.dtype))
     return acc.reshape(-1)
+
+
+def merge_all(accum_padded, outputs, t: int):
+    """Fused merge: one tile-indexed scatter-set over ALL lanes' output
+    tiles (``outputs`` is a list of (tiles, tile_idx) pairs, globally
+    tile-disjoint by construction)."""
+    if not outputs:
+        return accum_padded
+    tiles = jnp.concatenate([o[0] for o in outputs])
+    idx = jnp.concatenate([o[1] for o in outputs])
+    return merge_tiles(accum_padded, tiles, idx, t)

@@ -86,6 +86,7 @@ class ServiceMetrics:
         self.plan_hits = 0
         self.plan_misses = 0
         self.store_evictions = 0
+        self.executor_evictions = 0
         self._stage: Dict[str, _Reservoir] = {
             s: _Reservoir(reservoir_size) for s in self.STAGES}
         self._queue_depth_fn = None  # wired by the service
@@ -112,6 +113,11 @@ class ServiceMetrics:
     def record_eviction(self, n: int = 1) -> None:
         with self._lock:
             self.store_evictions += n
+
+    def record_executor_eviction(self, n: int = 1) -> None:
+        """Warm-path executor LRU evictions (count or byte budget)."""
+        with self._lock:
+            self.executor_evictions += n
 
     def record_done(self, m: RequestMetrics) -> None:
         with self._lock:
@@ -160,6 +166,7 @@ class ServiceMetrics:
                 "plan_hits": self.plan_hits,
                 "plan_misses": self.plan_misses,
                 "store_evictions": self.store_evictions,
+                "executor_evictions": self.executor_evictions,
                 "queue_depth": self.queue_depth,
             }
             for s in self.STAGES:

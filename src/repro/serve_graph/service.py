@@ -143,6 +143,18 @@ class GraphService:
         repeats reuse the compiled function. Executors of an evicted
         store are purged with it (they would otherwise keep its device
         arrays alive behind the byte budget's back).
+    executor_byte_budget: optional device-byte bound on the same LRU,
+        using each Executor's ``memory_footprint()`` (the bundle's
+        materialized/packed payload bytes). Executors sharing a plan
+        share payloads, so the sum over-attributes shared bytes — it is
+        a conservative budget, not an exact accounting. The
+        most-recently-inserted executor always stays (a single oversized
+        plan must still be servable). NOTE: evicting an executor frees
+        its jitted programs immediately, but its payloads stay pinned by
+        the store's plan cache until that plan is evicted there — pair
+        this budget with ``max_plans_per_store`` (and the store cache's
+        ``byte_budget``, which counts those payload bytes) to bound
+        actual device memory.
     """
 
     def __init__(self, *, cache: Optional[GraphStoreCache] = None,
@@ -154,9 +166,13 @@ class GraphService:
                  default_path: Optional[str] = None,
                  max_plans_per_store: Optional[int] = None,
                  max_executors: int = 64,
+                 executor_byte_budget: Optional[int] = None,
                  metrics: Optional[ServiceMetrics] = None):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
+        if executor_byte_budget is not None and executor_byte_budget < 1:
+            raise ValueError("executor_byte_budget must be >= 1, got "
+                             f"{executor_byte_budget}")
         self.metrics = metrics or ServiceMetrics()
         self.cache = cache or GraphStoreCache(
             byte_budget=byte_budget, max_stores=max_stores,
@@ -166,8 +182,11 @@ class GraphService:
         self.default_path = default_path
         self.max_plans_per_store = max_plans_per_store
         self.max_executors = max_executors
-        self._executors: "collections.OrderedDict[tuple, Executor]" = \
+        self.executor_byte_budget = executor_byte_budget
+        # key -> (Executor, footprint bytes frozen at insert time)
+        self._executors: "collections.OrderedDict[tuple, tuple]" = \
             collections.OrderedDict()
+        self._executor_bytes = 0
 
         self._queue: "queue.Queue" = queue.Queue()
         self.metrics._queue_depth_fn = self._queue.qsize
@@ -207,6 +226,7 @@ class GraphService:
                 w.join()
             with self._lock:
                 self._executors.clear()
+                self._executor_bytes = 0
 
     # -- registration ---------------------------------------------------
     def register(self, graph: Graph, *, geom: Optional[Geometry] = None,
@@ -242,7 +262,29 @@ class GraphService:
         self.metrics.record_eviction()
         with self._lock:
             for k in [k for k in self._executors if k[0] == skey]:
-                del self._executors[k]
+                self._drop_executor(k)
+
+    def _drop_executor(self, key) -> None:
+        """Remove one cached executor (caller holds the lock)."""
+        _, nbytes = self._executors.pop(key)
+        self._executor_bytes -= nbytes
+
+    def _trim_executors(self) -> None:
+        """Evict LRU executors past the count bound and (when set) the
+        byte budget. The count bound is strict (``max_executors=0``
+        still disables caching entirely); the byte bound never evicts
+        the newest entry — a single oversized plan must stay servable
+        (caller holds the lock)."""
+        evicted = 0
+        while self._executors and (
+                len(self._executors) > self.max_executors
+                or (self.executor_byte_budget is not None
+                    and self._executor_bytes > self.executor_byte_budget
+                    and len(self._executors) > 1)):
+            self._drop_executor(next(iter(self._executors)))
+            evicted += 1
+        if evicted:
+            self.metrics.record_executor_eviction(evicted)
 
     def _build_store(self, graph: Graph, geom: Geometry = None,
                      use_dbg: bool = None) -> GraphStore:
@@ -365,11 +407,11 @@ class GraphService:
             t_store_ms = (time.perf_counter() - t0) * 1e3
 
             with self._lock:
-                ex = self._executors.get(exec_key)
-                if ex is not None:
+                hit = self._executors.get(exec_key)
+                if hit is not None:
                     self._executors.move_to_end(exec_key)
-            if ex is not None:
-                plan_hit, t_plan_ms = True, 0.0
+            if hit is not None:
+                ex, plan_hit, t_plan_ms = hit[0], True, 0.0
             else:
                 plan_hit = store.has_plan(job.config)
                 t0 = time.perf_counter()
@@ -377,10 +419,13 @@ class GraphService:
                 t_plan_ms = (time.perf_counter() - t0) * 1e3
                 ex = Executor(store, bundle, job.make_app(),
                               path=job.path)
+                nbytes = ex.memory_footprint()
                 with self._lock:
-                    self._executors[exec_key] = ex
-                    while len(self._executors) > self.max_executors:
-                        self._executors.popitem(last=False)
+                    if exec_key in self._executors:
+                        self._drop_executor(exec_key)   # racing build won
+                    self._executors[exec_key] = (ex, nbytes)
+                    self._executor_bytes += nbytes
+                    self._trim_executors()
 
             t0 = time.perf_counter()
             result = ex.run(max_iters=job.max_iters)
@@ -429,11 +474,14 @@ class GraphService:
     def stats(self) -> dict:
         with self._lock:
             n_exec = len(self._executors)
+            exec_bytes = self._executor_bytes
         return {
             "service": self.metrics.snapshot(),
             "store_cache": self.cache.stats(),
             "registered_graphs": len(self._registry),
             "cached_executors": n_exec,
+            "executor_bytes": exec_bytes,
+            "executor_byte_budget": self.executor_byte_budget,
         }
 
 

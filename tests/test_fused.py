@@ -1,0 +1,195 @@
+"""Fused (packed-lane) execution: bit-identical parity vs the per-entry
+path for every builtin app on both pipeline kinds and both kernel paths,
+plus pack-time invariants (tile disjointness) as a property test."""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import gas
+from repro.core.executor import init_props
+from repro.core.types import Geometry
+from repro.graphs.rmat import rmat
+from repro.kernels import ops
+
+GEOM = Geometry(U=128, W=128, T=128, E_BLK=128, big_batch=2)
+APPS = ("pagerank", "bfs", "sssp", "wcc", "closeness")
+
+# forced all-Little / all-Big splits: deterministic coverage of both
+# pipeline kinds regardless of what the perf model would classify
+LITTLE = api.PlanConfig(mode="fixed", forced_little=2, forced_big=0,
+                        n_lanes=2)
+BIG = api.PlanConfig(mode="fixed", forced_little=0, forced_big=2, n_lanes=2)
+
+
+@pytest.fixture(scope="module")
+def fused_graph():
+    return rmat(9, 8, seed=3)   # 512 vertices, 4 partitions at U=128
+
+
+@pytest.fixture(scope="module")
+def fused_store(fused_graph):
+    return api.GraphStore(fused_graph, geom=GEOM)
+
+
+def _run_both(store, app, config, path, max_iters=3):
+    f = api.compile(None, app, store=store, config=config, path=path,
+                    fuse_lanes=True)
+    u = api.compile(None, app, store=store, config=config, path=path,
+                    fuse_lanes=False)
+    pf, mf = f.run(max_iters=max_iters)
+    pu, mu = u.run(max_iters=max_iters)
+    return f, u, pf, pu, mf, mu
+
+
+@pytest.mark.parametrize("app", APPS)
+@pytest.mark.parametrize("config", [LITTLE, BIG], ids=["little", "big"])
+def test_fused_bit_identical_ref(fused_store, app, config):
+    f, u, pf, pu, mf, mu = _run_both(fused_store, app, config, "ref")
+    assert mf["iterations"] == mu["iterations"]
+    np.testing.assert_array_equal(pf, pu)
+    # the fused path must actually fuse: fewer launches than entries
+    sf, su = f.stats(), u.stats()
+    assert sf["num_entries"] == su["num_entries"] > sf["kernel_dispatches"] \
+        or sf["num_entries"] == sf["kernel_dispatches"] <= 2
+
+
+@pytest.mark.parametrize("app", APPS)
+@pytest.mark.parametrize("config", [LITTLE, BIG], ids=["little", "big"])
+def test_fused_bit_identical_pallas_interpret(fused_store, app, config):
+    _, _, pf, pu, mf, mu = _run_both(fused_store, app, config, "pallas",
+                                     max_iters=2)
+    assert mf["iterations"] == mu["iterations"]
+    np.testing.assert_array_equal(pf, pu)
+
+
+def test_fused_mixed_lane_parity(fused_store):
+    """n_lanes=1 with both dense and sparse work puts BOTH kinds in one
+    lane; pack_lane must split it into (at most) one payload per kind."""
+    cfg = api.PlanConfig(mode="model", n_lanes=1)
+    f, u, pf, pu, _, _ = _run_both(fused_store, "pagerank", cfg, "ref")
+    np.testing.assert_array_equal(pf, pu)
+    payloads = [p for lane in f.executor.packed_lanes for p in lane]
+    assert 1 <= len(payloads) <= 2
+    assert len({p["kind"] for p in payloads}) == len(payloads)
+
+
+def test_packed_big_dedups_shared_table(fused_store):
+    """Split entries of the same Big work share one unique-source table
+    in the packed payload (window ids rebased to one copy)."""
+    work = fused_store.big_work((0, 1, 2, 3))
+    interior = np.nonzero(np.asarray(work.tile_first)[1:])[0] + 1
+    assert interior.size, "expected a multi-tile big work"
+    mid = int(interior[0])      # first interior tile boundary
+    e1 = ops._entry_np(work, 0, mid)
+    e2 = ops._entry_np(work, mid, work.n_blocks)
+    packed = ops._pack_group([e1, e2])
+    assert packed["unique_src"].shape == work.unique_src.shape
+    assert packed["n_entries"] == 2
+    # same table -> no window offset for the second segment
+    np.testing.assert_array_equal(
+        packed["window_id"],
+        np.concatenate([e1["window_id"], e2["window_id"]]))
+
+
+def test_pack_rejects_overlapping_tiles(fused_store):
+    """Packing the same block range twice duplicates destination tiles —
+    the pack-time validator must refuse to build such a payload."""
+    work = fused_store.little_work(0)
+    e1 = ops._entry_np(work, 0, work.n_blocks)
+    e2 = ops._entry_np(work, 0, work.n_blocks)
+    with pytest.raises(AssertionError):
+        ops._pack_group([e1, e2])
+
+
+def test_property_packing_preserves_tile_disjointness():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(scale=st.integers(7, 9), ef=st.integers(2, 8),
+           seed=st.integers(0, 99), n_lanes=st.integers(1, 4))
+    def check(scale, ef, seed, n_lanes):
+        g = rmat(scale, ef, seed=seed)
+        store = api.GraphStore(g, geom=GEOM)
+        bundle = store.plan(api.PlanConfig(mode="model", n_lanes=n_lanes))
+        packed = bundle.packed_lanes()
+        entries = bundle.lane_entries()
+        all_idx = []
+        for lane in packed:
+            for p in lane:
+                idx = np.asarray(p["tile_idx"])
+                # per-payload: unique tiles, dense non-decreasing local ids
+                assert np.unique(idx).shape[0] == idx.shape[0]
+                assert p["n_out_tiles"] == idx.shape[0]
+                all_idx.append(idx)
+        flat = (np.concatenate(all_idx) if all_idx
+                else np.zeros(0, np.int32))
+        # across payloads: globally disjoint (single scatter-set merge)
+        assert np.unique(flat).shape[0] == flat.shape[0]
+        # packing loses no tiles vs the per-entry materialization
+        entry_idx = np.concatenate(
+            [np.asarray(p["tile_idx"]) for lane in entries for p in lane]
+        ) if any(lane for lane in entries) else np.zeros(0, np.int32)
+        np.testing.assert_array_equal(np.sort(flat), np.sort(entry_idx))
+
+    check()
+
+
+def test_time_lanes_caches_lane_fns(fused_store):
+    ex = fused_store.executor(gas.make_pagerank(max_iters=2), LITTLE,
+                              path="ref")
+    assert ex._lane_fns is None
+    ex.time_lanes(repeats=1)
+    fns = ex._lane_fns
+    assert fns is not None
+    ex.time_lanes(repeats=1)
+    assert ex._lane_fns is fns          # no rebuild / re-trace
+
+
+def test_dispatch_and_trace_stats(fused_store):
+    app = gas.make_pagerank(max_iters=2)
+    f = fused_store.executor(app, LITTLE, path="ref", fuse_lanes=True)
+    u = fused_store.executor(app, LITTLE, path="ref", fuse_lanes=False)
+    sf, su = f.dispatch_stats(), u.dispatch_stats()
+    assert sf["fuse_lanes"] and not su["fuse_lanes"]
+    assert sf["num_entries"] == su["num_entries"]
+    assert sf["kernel_dispatches"] <= su["kernel_dispatches"]
+    assert sf["merge_dispatches"] == 1
+    assert sf["payload_bytes"] > 0 and su["payload_bytes"] > 0
+    tf, tu = f.trace_stats(), u.trace_stats()
+    assert 0 < tf["jaxpr_eqns"] <= tu["jaxpr_eqns"]
+    # padding accounting flows into stats()
+    st = f.stats()
+    assert st["num_real_edges"] == fused_store.graph.num_edges
+    assert 0 < st["padding_efficiency"] <= 1.0
+
+
+def test_executor_memory_footprint_matches_bundle(fused_store):
+    ex = fused_store.executor(gas.make_pagerank(max_iters=2), LITTLE,
+                              path="ref")
+    db = ex.bundle.device_bytes()
+    assert ex.memory_footprint() == db["packed_bytes"] > 0
+
+
+def test_service_executor_byte_budget(fused_graph):
+    from repro.serve_graph import GraphService
+    with GraphService(workers=1, default_path="ref",
+                      executor_byte_budget=1) as svc:
+        svc.run(fused_graph, "pagerank", max_iters=2, n_lanes=2)
+        svc.run(fused_graph, "bfs", max_iters=2, n_lanes=2)
+        st = svc.stats()
+        # 1-byte budget: only the newest executor survives
+        assert st["cached_executors"] == 1
+        assert st["executor_bytes"] > 0
+        assert st["service"]["executor_evictions"] >= 1
+
+
+def test_service_executor_bytes_tracked(fused_graph):
+    from repro.serve_graph import GraphService
+    with GraphService(workers=1, default_path="ref") as svc:
+        svc.run(fused_graph, "pagerank", max_iters=2, n_lanes=2)
+        st = svc.stats()
+        assert st["cached_executors"] == 1
+        assert st["executor_bytes"] > 0
+        assert st["executor_byte_budget"] is None
+        assert st["service"]["executor_evictions"] == 0
