@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV lines (see benchmarks/common.emit).
   Fig. 13  bench_roofline       resource-centric roofline analogue
   —        bench_serving        GraphService throughput/latency/caching
   —        bench_fused          fused vs per-entry execution (+ JSON)
+  —        bench_streaming      delta apply vs full rebuild (+ JSON)
 """
 from __future__ import annotations
 
@@ -21,7 +22,7 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: pipelines,heterogeneity,scalability,"
                          "preprocessing,amortization,sota,roofline,serving,"
-                         "fused")
+                         "fused,streaming")
     ap.add_argument("--quick", action="store_true",
                     help="smaller graph set (CI-speed)")
     ap.add_argument("--smoke", action="store_true",
@@ -34,7 +35,7 @@ def main() -> None:
 
     from . import (bench_fused, bench_heterogeneity, bench_pipelines,
                    bench_preprocessing, bench_roofline, bench_scalability,
-                   bench_serving, bench_sota)
+                   bench_serving, bench_sota, bench_streaming)
 
     suites = [
         ("pipelines", lambda: bench_pipelines.run(
@@ -67,6 +68,12 @@ def main() -> None:
             graphs=["ggs"] if args.quick else ["ggs", "hws", "r16s"],
             lane_counts=(8,) if args.quick else (8, 16),
             repeats=3 if args.quick else 5)),
+        # the >=5x acceptance gate runs at every tier (the quick tier
+        # IS the acceptance graph; --smoke shrinks it further for CI
+        # and loosens the gate — see bench_streaming). Always 5 repeats:
+        # the gate is a median ratio and 3 samples is too noisy to gate.
+        ("streaming", lambda: bench_streaming.run(smoke=args.smoke,
+                                                  repeats=5)),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

@@ -1,0 +1,94 @@
+"""Evolving-graph serving demo: one GraphService, an RMAT graph under
+continuous degree-skewed edge churn, delta updates racing concurrent
+submits. Each round submits the app mix against the current snapshot,
+applies a churn delta through ``GraphService.update`` while those
+requests are in flight, then queries the NEW snapshot — showing
+incremental apply latency, dirty-partition counts, packed-payload
+carry-over, and warm-hit/invalidation stats.
+
+    PYTHONPATH=src python examples/streaming.py
+"""
+import numpy as np
+
+from repro import api
+from repro.graphs.rmat import rmat
+from repro.streaming import apply_delta_to_graph, random_delta
+
+GEOM = api.Geometry(U=512, W=256, T=256, E_BLK=256, big_batch=4)
+APPS = [
+    ("pagerank", {}),
+    ("bfs", {"root": 0}),
+    ("sssp", {"root": 0}),
+    ("wcc", {}),
+]
+ROUNDS = 4
+CHURN = 0.005           # 0.5% of edges per round
+HOT_FRAC = 0.01         # churn concentrates on hot vertices (the
+                        # preferential-attachment pattern DBG localizes)
+
+graph = rmat(13, 12, seed=42, weighted=True)
+
+with api.GraphService(workers=2, default_geom=GEOM,
+                      default_path="ref") as svc:
+    fp = svc.register(graph)
+    print(f"base: V={graph.num_vertices} E={graph.num_edges} "
+          f"fp={fp[:12]}…")
+
+    for rnd in range(ROUNDS):
+        # submits against the CURRENT snapshot ...
+        handles = [svc.submit(fingerprint=fp, app=name, app_kwargs=kw,
+                              n_lanes=8, max_iters=4)
+                   for name, kw in APPS]
+        # ... race a delta update; in-flight requests finish on the old
+        # snapshot (lease-pinned), the cache re-keys to the new one
+        delta = random_delta(graph, churn=CHURN, seed=100 + rnd,
+                             hot_frac=HOT_FRAC, base_fp=fp)
+        res = svc.update(fp, delta)
+        s = res.stats
+        print(f"round {rnd}: update {res.t_update_ms:6.1f} ms "
+              f"({delta.num_changes} changes, "
+              f"dirty {s['dirty_partitions']}/{s['partitions']} parts, "
+              f"packed lanes reused {s['packed_lanes_reused']}, "
+              f"repacked {s['packed_lanes_repacked']}, "
+              f"old store retired: {res.retired})")
+
+        for (name, _), h in zip(APPS, handles):
+            h.result(timeout=300)       # old-snapshot requests complete
+
+        # the generator tracks the evolving graph for the next delta
+        # (the service itself only needs the chain)
+        graph = apply_delta_to_graph(graph, delta, check_fp=False)
+        fp = res.fingerprint
+
+        # post-update queries land warm on the spliced store
+        h = svc.submit(fingerprint=fp, app="pagerank", n_lanes=8,
+                       max_iters=4)
+        _, meta = h.result(timeout=300)
+        print(f"         post-update pagerank: "
+              f"store_hit={h.metrics.store_hit} "
+              f"plan_hit={h.metrics.plan_hit} "
+              f"total={h.metrics.t_total_ms:.1f} ms")
+
+    snap = svc.metrics.snapshot()
+    print(f"\nservice: {snap['completed']} requests, "
+          f"{snap['updates']} updates "
+          f"(p50 {snap['p50_update_ms']:.1f} ms), "
+          f"{snap['stores_retired']} snapshots retired, "
+          f"{snap['plans_rebuilt']} plans rebuilt, "
+          f"packed lanes reused/repacked "
+          f"{snap['packed_lanes_reused']}/{snap['packed_lanes_repacked']}, "
+          f"store hit rate {snap['store_hit_rate']:.0%}")
+    cache = svc.cache.stats()
+    print(f"store cache: {cache['stores']} live stores, "
+          f"{cache['evictions']} evictions, "
+          f"{cache['freed_plan_bytes'] / 1e6:.1f} MB of plan payloads "
+          f"freed by retirement")
+
+    # sanity: the final served snapshot matches a direct build of the
+    # final graph (BFS is order-exact)
+    served, _ = svc.run(fingerprint=fp, app="bfs", app_kwargs={"root": 0},
+                        n_lanes=8, max_iters=6, timeout=300)
+    direct, _ = api.compile(graph, "bfs", geom=GEOM, n_lanes=8,
+                            path="ref").run(max_iters=6)
+    assert np.array_equal(served, direct)
+    print("final snapshot verified against a direct rebuild ✓")

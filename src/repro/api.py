@@ -48,15 +48,18 @@ from .core.store import GraphStore
 from .core.types import Geometry, SchedulePlan
 from .graphs.formats import Graph, fingerprint as graph_fingerprint
 from .serve_graph import (GraphService, GraphStoreCache, RequestHandle,
-                          ServiceMetrics)
+                          ServiceMetrics, UpdateResult)
+from .streaming import (GraphDelta, apply_delta, apply_delta_to_graph,
+                        chain_fingerprint, make_delta, random_delta)
 
 __all__ = [
     "BUILTIN_APPS", "CompiledApp", "Executor", "GASApp", "Geometry",
-    "GraphService", "GraphStore", "GraphStoreCache", "HW", "PlanBundle",
-    "PlanConfig", "Planner", "RequestHandle", "SchedulePlan",
-    "ServiceMetrics", "TPU_V5E", "TPU_V5E_SCALED", "compile",
-    "graph_fingerprint", "make_bfs", "make_closeness", "make_pagerank",
-    "make_sssp", "make_wcc",
+    "GraphDelta", "GraphService", "GraphStore", "GraphStoreCache", "HW",
+    "PlanBundle", "PlanConfig", "Planner", "RequestHandle", "SchedulePlan",
+    "ServiceMetrics", "TPU_V5E", "TPU_V5E_SCALED", "UpdateResult",
+    "apply_delta", "apply_delta_to_graph", "chain_fingerprint", "compile",
+    "graph_fingerprint", "make_bfs", "make_closeness", "make_delta",
+    "make_pagerank", "make_sssp", "make_wcc", "random_delta",
 ]
 
 

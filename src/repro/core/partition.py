@@ -47,13 +47,46 @@ def apply_dbg(g: Graph) -> Tuple[Graph, np.ndarray]:
 # [i*U, (i+1)*U); edge lists kept src-sorted inside each partition.
 # ---------------------------------------------------------------------------
 
+def partition_info(pid: int, s: np.ndarray, d: np.ndarray, edge_lo: int,
+                   num_vertices: int, geom: Geometry) -> PartitionInfo:
+    """Stats of one dst-range partition from its (src, dst)-sorted
+    segment arrays. The single source of truth for partition stats:
+    both the cold build (:func:`partition_graph`) and the streaming
+    dirty-partition rebuild (:mod:`repro.streaming`) go through here, so
+    the two paths produce bit-identical :class:`PartitionInfo`."""
+    U, W, T, E_BLK = geom.U, geom.W, geom.T, geom.E_BLK
+    lo = int(edge_lo)
+    hi = lo + int(s.shape[0])
+    n_uniq = int(np.unique(s).shape[0]) if hi > lo else 0
+    n_win = int(np.unique(s // W).shape[0]) if hi > lo else 0
+    n_tile = int(np.unique((d - pid * U) // T).shape[0]) if hi > lo else 0
+    # exact padded block counts per pipeline kind (brick group-by)
+    if hi > lo:
+        tile = (d // T).astype(np.int64)
+        bricks_l = tile * (1 + int(s.max()) // W) + s // W
+        _, cnt_l = np.unique(bricks_l, return_counts=True)
+        blocks_l = int((-(-cnt_l // E_BLK)).sum())
+        uniq, cidx = np.unique(s, return_inverse=True)
+        bricks_b = tile * (1 + uniq.shape[0] // W) + cidx // W
+        _, cnt_b = np.unique(bricks_b, return_counts=True)
+        blocks_b = int((-(-cnt_b // E_BLK)).sum())
+    else:
+        blocks_l = blocks_b = 0
+    return PartitionInfo(
+        pid=pid, dst_lo=pid * U, dst_hi=min((pid + 1) * U, num_vertices),
+        edge_lo=lo, edge_hi=hi, num_edges=hi - lo,
+        num_unique_src=n_uniq, num_src_windows=n_win, num_dst_tiles=n_tile,
+        blocks_little=blocks_l, blocks_big=blocks_b,
+    )
+
+
 def partition_graph(g: Graph, geom: Geometry) -> Tuple[List[PartitionInfo], dict]:
     """Return per-partition infos plus partition-sorted edge arrays.
 
     The returned dict has 'src','dst','weights' arrays sorted by
     (partition, src, dst) — the canonical order all blocking starts from.
     """
-    U, W, T = geom.U, geom.W, geom.T
+    U = geom.U
     num_parts = max(1, -(-g.num_vertices // U))
     pids = g.dst // U
     order = np.lexsort((g.dst, g.src, pids))
@@ -62,33 +95,11 @@ def partition_graph(g: Graph, geom: Geometry) -> Tuple[List[PartitionInfo], dict
     wts = (g.weights[order] if g.weights is not None
            else np.zeros(src.shape[0], dtype=np.float32))
     bounds = np.searchsorted(pids[order], np.arange(num_parts + 1))
-    E_BLK = geom.E_BLK
     infos: List[PartitionInfo] = []
     for p in range(num_parts):
         lo, hi = int(bounds[p]), int(bounds[p + 1])
-        s = src[lo:hi]
-        d = dst[lo:hi]
-        n_uniq = int(np.unique(s).shape[0]) if hi > lo else 0
-        n_win = int(np.unique(s // W).shape[0]) if hi > lo else 0
-        n_tile = int(np.unique((d - p * U) // T).shape[0]) if hi > lo else 0
-        # exact padded block counts per pipeline kind (brick group-by)
-        if hi > lo:
-            tile = (d // T).astype(np.int64)
-            bricks_l = tile * (1 + int(s.max()) // W) + s // W
-            _, cnt_l = np.unique(bricks_l, return_counts=True)
-            blocks_l = int((-(-cnt_l // E_BLK)).sum())
-            uniq, cidx = np.unique(s, return_inverse=True)
-            bricks_b = tile * (1 + uniq.shape[0] // W) + cidx // W
-            _, cnt_b = np.unique(bricks_b, return_counts=True)
-            blocks_b = int((-(-cnt_b // E_BLK)).sum())
-        else:
-            blocks_l = blocks_b = 0
-        infos.append(PartitionInfo(
-            pid=p, dst_lo=p * U, dst_hi=min((p + 1) * U, g.num_vertices),
-            edge_lo=lo, edge_hi=hi, num_edges=hi - lo,
-            num_unique_src=n_uniq, num_src_windows=n_win, num_dst_tiles=n_tile,
-            blocks_little=blocks_l, blocks_big=blocks_b,
-        ))
+        infos.append(partition_info(p, src[lo:hi], dst[lo:hi], lo,
+                                    g.num_vertices, geom))
     edges = {"src": src, "dst": dst, "weights": wts}
     return infos, edges
 

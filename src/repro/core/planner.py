@@ -121,6 +121,15 @@ class PlanBundle:
         default=None, repr=False, compare=False)
     _mat_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
+    # streaming carry-over: lane idx -> packed device payloads reused
+    # from a pre-delta bundle (consumed by packed_lanes(); see
+    # repro.streaming.apply_delta)
+    _packed_seed: Optional[dict] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    packed_lanes_reused: int = dataclasses.field(
+        default=0, repr=False, compare=False)
+    packed_bytes_reused: int = dataclasses.field(
+        default=0, repr=False, compare=False)
 
     @property
     def dense(self) -> List[PartitionInfo]:
@@ -149,12 +158,24 @@ class PlanBundle:
         instead of one per entry (see ``kernels.ops.pack_lanes``).
         Memoized exactly like :meth:`lane_entries` — and independently
         of it, so a fused-only workload never pays for (or pins) the
-        per-entry materialization."""
+        per-entry materialization. Bundles rebuilt after a streaming
+        delta carry a ``_packed_seed`` of pre-delta payloads for
+        structurally-unchanged lanes; those are spliced in here instead
+        of re-packed/re-uploaded (``packed_lanes_reused`` /
+        ``packed_bytes_reused`` record what was carried over)."""
         with self._mat_lock:
             if self._packed_lanes is None:
                 from ..kernels import ops
+                seed = self._packed_seed
                 self._packed_lanes = ops.pack_lanes(
-                    self.plan, self.little_works, self.big_works)
+                    self.plan, self.little_works, self.big_works,
+                    reuse=seed)
+                if seed:
+                    self.packed_lanes_reused = len(seed)
+                    self.packed_bytes_reused = sum(
+                        ops.payload_nbytes(p)
+                        for lane in seed.values() for p in lane)
+                self._packed_seed = None   # release pre-delta bundle refs
             return self._packed_lanes
 
     def device_bytes(self) -> dict:

@@ -26,7 +26,7 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from ..graphs.formats import Graph
+from ..graphs.formats import Graph, relabel
 from . import partition as part
 from .types import BlockedEdges, Geometry, PartitionInfo
 
@@ -46,12 +46,24 @@ class GraphStore:
              bound is hit. Executors already holding an evicted bundle
              keep working — they own a reference; eviction only stops
              NEW plan() calls from reusing it.
+    perm:    explicit vertex relabeling (``perm[old_id] = new_id``),
+             overriding the DBG computation. Streaming equivalence
+             checks use this to rebuild a cold store under a delta
+             chain's frozen permutation; it also admits precomputed
+             orderings (e.g. Gorder/RCM) in place of DBG.
+    fingerprint: identity override. ``fingerprint()`` normally hashes
+             the source graph lazily; the serving layer passes its own
+             key here so stores rebuilt from a delta chain keep the
+             CHAINED identity (which differs from the content hash of
+             the materialized graph).
     """
 
     DEFAULT_MAX_PLANS = 32
 
     def __init__(self, graph: Graph, geom: Geometry = Geometry(),
-                 use_dbg: bool = True, max_plans: Optional[int] = None):
+                 use_dbg: bool = True, max_plans: Optional[int] = None,
+                 perm: Optional[np.ndarray] = None,
+                 fingerprint: Optional[str] = None):
         self.geom = geom
         self.use_dbg = use_dbg
         self.max_plans = (self.DEFAULT_MAX_PLANS if max_plans is None
@@ -59,9 +71,18 @@ class GraphStore:
         if self.max_plans < 1:
             raise ValueError(f"max_plans must be >= 1, got {max_plans}")
         self.source = graph   # pre-DBG input, for sharing-mismatch checks
+        self._fp = fingerprint
 
         t0 = time.perf_counter()
-        if use_dbg:
+        if perm is not None:
+            perm = np.asarray(perm, dtype=np.int32)
+            if perm.shape[0] != graph.num_vertices:
+                raise ValueError(
+                    f"perm has {perm.shape[0]} entries for a graph of "
+                    f"{graph.num_vertices} vertices")
+            self.graph = relabel(graph, perm, name_suffix="_perm")
+            self.perm = perm
+        elif use_dbg:
             self.graph, self.perm = part.apply_dbg(graph)
         else:
             self.graph = graph
@@ -85,6 +106,60 @@ class GraphStore:
         self._plan_lock = threading.RLock()
         self.plan_evictions = 0
         self._aux = None
+
+    @classmethod
+    def _derived(cls, base: "GraphStore", *, graph: Graph,
+                 infos: List[PartitionInfo], edges: dict,
+                 little_cache: Dict[int, BlockedEdges],
+                 big_cache: Dict[Tuple[int, ...], BlockedEdges],
+                 fingerprint: str, t_partition: float = 0.0
+                 ) -> "GraphStore":
+        """Build a store by splicing delta-updated state into a base
+        store's layout (used by :func:`repro.streaming.apply_delta`).
+        Shares the base's frozen permutation and the untouched
+        blockings; carries no source graph (``source is None`` — the
+        chained ``fingerprint`` is its identity) and starts with an
+        empty plan cache (the streaming layer rebuilds plans
+        surgically). NOTE: while base and derived snapshots are BOTH
+        alive (the old one draining out of the serving cache), shared
+        state — perm, carried blockings, reused packed payloads — is
+        counted in both stores' ``memory_footprint()``; like executor
+        byte budgeting, footprints are conservative attribution, not
+        exclusive ownership."""
+        self = cls.__new__(cls)
+        self.geom = base.geom
+        self.use_dbg = base.use_dbg
+        self.max_plans = base.max_plans
+        self.source = None
+        self._fp = fingerprint
+        self.graph = graph
+        self.perm = base.perm
+        self.t_dbg = 0.0
+        self._infos = infos
+        self.edges = edges
+        self.V_pad = base.V_pad
+        self.t_partition = t_partition
+        self._little_cache = dict(little_cache)
+        self._big_cache = dict(big_cache)
+        self.t_block = 0.0
+        self._plan_cache = collections.OrderedDict()
+        self._plan_lock = threading.RLock()
+        self.plan_evictions = 0
+        self._aux = None
+        return self
+
+    def fingerprint(self) -> str:
+        """Identity of the graph this store was built from: the source
+        graph's content hash, or — for delta-derived stores — the
+        chained ``(base_fp, delta_fp)`` fingerprint set at derivation.
+        This is what :func:`repro.streaming.apply_delta` validates a
+        delta's ``base_fp`` against."""
+        if self._fp is None:
+            if self.source is None:
+                raise RuntimeError("derived store carries no source graph "
+                                   "and was given no fingerprint")
+            self._fp = self.source.fingerprint()
+        return self._fp
 
     def validate_compatible(self, graph=None, geom=None, use_dbg=None):
         """Reject asks that contradict what this store was built with.
@@ -182,15 +257,21 @@ class GraphStore:
         with self._plan_lock:
             return config.cache_key() in self._plan_cache
 
-    def clear_plans(self) -> int:
+    def clear_plans(self) -> dict:
         """Drop every cached PlanBundle (and the device-resident lane
         entries memoized on them). Blockings stay cached, so re-planning
         costs milliseconds. Use when sweeping many configs whose
-        materialized entries would otherwise accumulate on device."""
+        materialized entries would otherwise accumulate on device.
+
+        Returns ``{"plans": evicted bundle count, "freed_bytes": device
+        bytes those bundles pinned (per-entry + packed payloads)}`` —
+        the same accounting the streaming layer uses to report what a
+        partial invalidation did and did not carry over."""
         with self._plan_lock:
             n = len(self._plan_cache)
+            freed = sum(_bundle_nbytes(b) for b in self._plan_cache.values())
             self._plan_cache.clear()
-        return n
+        return {"plans": n, "freed_bytes": int(freed)}
 
     def executor(self, app, config=None, path: Optional[str] = None,
                  fuse_lanes: bool = True):
@@ -215,9 +296,14 @@ class GraphStore:
         Little/Big blockings, cached plans' device-resident lane entries,
         and the shared aux. Feeds the serving layer's byte-budgeted
         store LRU and metrics."""
-        graph_bytes = self.graph.src.nbytes + self.graph.dst.nbytes
-        if self.graph.weights is not None:
-            graph_bytes += self.graph.weights.nbytes
+        # delta-derived stores alias their graph arrays INTO the
+        # partition-sorted edge arrays (zero-copy splice) — count shared
+        # memory once, under edge_bytes
+        shared = {id(a) for a in self.edges.values()}
+        graph_bytes = sum(
+            int(a.nbytes) for a in (self.graph.src, self.graph.dst,
+                                    self.graph.weights)
+            if a is not None and id(a) not in shared)
         graph_bytes += self.perm.nbytes
         edge_bytes = sum(int(a.nbytes) for a in self.edges.values())
         with self._plan_lock:

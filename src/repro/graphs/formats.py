@@ -48,12 +48,13 @@ class Graph:
         """Stable content hash of the graph (see :func:`fingerprint`).
 
         The digest is cached on the instance; rebinding ``weights`` (or
-        any array attribute) to a *new* array invalidates it, but pure
-        in-place mutation of an existing array does not — pass
-        ``refresh=True`` after in-place edits. The cache token holds
-        strong references to the hashed arrays and compares by object
-        identity, so a rebound-then-GC'd array can't alias a stale
-        digest via id() reuse.
+        any array attribute) to a *new* array invalidates it. Canonical
+        graphs carry read-only arrays (see :func:`canonicalize`), so the
+        cached digest can never go silently stale via in-place edits —
+        structural change flows through :mod:`repro.streaming` deltas,
+        which produce a new Graph (and a new fingerprint) instead.
+        ``refresh=True`` forces a re-hash anyway (escape hatch for
+        hand-built, still-writable Graphs).
         """
         cached = getattr(self, "_fp_cache", None)
         if (not refresh and cached is not None
@@ -97,14 +98,30 @@ def fingerprint(g: Graph) -> str:
     return h.hexdigest()
 
 
+def freeze(g: Graph) -> Graph:
+    """Mark the graph's arrays read-only. Every canonical Graph is
+    frozen: the cached :meth:`Graph.fingerprint` (and every store /
+    plan / packed-payload cache keyed on it) relies on edge arrays
+    never mutating in place. Structural change goes through
+    :mod:`repro.streaming` deltas, the only sanctioned mutation path.
+    The arrays here are always fresh copies (fancy indexing), so this
+    never freezes caller-owned buffers."""
+    g.src.setflags(write=False)
+    g.dst.setflags(write=False)
+    if g.weights is not None:
+        g.weights.setflags(write=False)
+    return g
+
+
 def canonicalize(g: Graph) -> Graph:
-    """Sort edges by (src, dst) — the paper's ascending-row COO form."""
+    """Sort edges by (src, dst) — the paper's ascending-row COO form.
+    The sorted arrays are frozen (see :func:`freeze`)."""
     order = np.lexsort((g.dst, g.src))
     g.src = np.ascontiguousarray(g.src[order], dtype=np.int32)
     g.dst = np.ascontiguousarray(g.dst[order], dtype=np.int32)
     if g.weights is not None:
         g.weights = np.ascontiguousarray(g.weights[order], dtype=np.float32)
-    return g
+    return freeze(g)
 
 
 def from_edges(

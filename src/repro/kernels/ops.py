@@ -227,20 +227,36 @@ def pack_lane(lane, little_works, big_works) -> List[dict]:
             for p in _pack_lane_np(lane, little_works, big_works)]
 
 
-def pack_lanes(plan, little_works, big_works) -> List[List[dict]]:
+def pack_lanes(plan, little_works, big_works,
+               reuse: Optional[dict] = None) -> List[List[dict]]:
     """Fused counterpart of :func:`materialize_lanes`: one packed payload
-    per (lane, kind) instead of one payload per entry."""
-    host = [_pack_lane_np(lane, little_works, big_works)
-            for lane in plan.lanes]
+    per (lane, kind) instead of one payload per entry.
+
+    ``reuse`` maps lane index -> already-packed device payload list (the
+    streaming layer seeds it with payloads carried over from a
+    pre-delta bundle whose lane is structurally unchanged). Reused lanes
+    skip host-side packing AND the device upload entirely; they still
+    participate in the global tile-disjointness check below."""
+    reuse = reuse or {}
+    host = [None if i in reuse
+            else _pack_lane_np(lane, little_works, big_works)
+            for i, lane in enumerate(plan.lanes)]
     # merge_all's single scatter-set needs tile disjointness ACROSS
     # payloads too (duplicate scatter indices have an unspecified
     # winner in XLA); _validate_packed only covers within-payload.
-    # Checked on the host copies, before anything is uploaded.
-    idx = [p["tile_idx"] for lane in host for p in lane]
+    # Checked on host copies (reused payloads' tile_idx pulled back —
+    # tiny per-tile arrays), before anything new is uploaded.
+    idx = []
+    for i, lane in enumerate(host):
+        if lane is None:
+            idx += [np.asarray(p["tile_idx"]) for p in reuse[i]]
+        else:
+            idx += [p["tile_idx"] for p in lane]
     all_idx = np.concatenate(idx) if idx else np.zeros(0, np.int32)
     assert np.unique(all_idx).shape[0] == all_idx.shape[0], \
         "plan assigns the same destination tile to multiple lanes"
-    return [[_upload_payload(p) for p in lane] for lane in host]
+    return [reuse[i] if lane is None else [_upload_payload(p) for p in lane]
+            for i, lane in enumerate(host)]
 
 
 def payload_nbytes(payload: dict) -> int:

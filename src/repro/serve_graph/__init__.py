@@ -9,15 +9,22 @@ Layering (each piece usable on its own):
                    coalescing of identical in-flight requests
     metrics      — per-request latency breakdown + service counters
 
-See README.md §Serving and examples/serving.py.
+Streaming graphs plug in through ``GraphService.update(fp, delta)``
+(see repro/streaming/): the cached store is spliced incrementally, the
+cache re-keys to the chained snapshot fingerprint under lease-pinning,
+and the delta chain is recorded for cold rebuilds.
+
+See README.md §Serving / §Streaming and examples/serving.py,
+examples/streaming.py.
 """
 from .fingerprint import StoreKey, graph_fingerprint, store_key
 from .metrics import RequestMetrics, ServiceMetrics
-from .service import GraphService, RequestHandle, ServiceClosed
+from .service import (GraphService, RequestHandle, ServiceClosed,
+                      UpdateResult)
 from .store_cache import GraphStoreCache
 
 __all__ = [
     "GraphService", "GraphStoreCache", "RequestHandle", "RequestMetrics",
-    "ServiceClosed", "ServiceMetrics", "StoreKey", "graph_fingerprint",
-    "store_key",
+    "ServiceClosed", "ServiceMetrics", "StoreKey", "UpdateResult",
+    "graph_fingerprint", "store_key",
 ]

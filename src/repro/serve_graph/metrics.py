@@ -72,7 +72,7 @@ class _Reservoir:
 class ServiceMetrics:
     """Aggregate counters + latency distributions for a GraphService."""
 
-    STAGES = ("queue", "store", "plan", "execute", "total")
+    STAGES = ("queue", "store", "plan", "execute", "total", "update")
 
     def __init__(self, reservoir_size: int = 2048):
         self._lock = threading.Lock()
@@ -87,6 +87,15 @@ class ServiceMetrics:
         self.plan_misses = 0
         self.store_evictions = 0
         self.executor_evictions = 0
+        # streaming delta updates (GraphService.update)
+        self.updates = 0
+        self.update_failures = 0
+        self.updates_deferred = 0     # applied lazily (store not cached)
+        self.stores_retired = 0       # old snapshots re-keyed out
+        self.plans_rebuilt = 0
+        self.packed_lanes_reused = 0
+        self.packed_lanes_repacked = 0
+        self.packed_bytes_reused = 0
         self._stage: Dict[str, _Reservoir] = {
             s: _Reservoir(reservoir_size) for s in self.STAGES}
         self._queue_depth_fn = None  # wired by the service
@@ -118,6 +127,30 @@ class ServiceMetrics:
         """Warm-path executor LRU evictions (count or byte budget)."""
         with self._lock:
             self.executor_evictions += n
+
+    def record_update(self, t_ms: float, stats: Optional[dict] = None,
+                      deferred: bool = False, retired: bool = False) -> None:
+        """One GraphService.update: latency plus the apply's
+        reuse/invalidation accounting (None when deferred)."""
+        with self._lock:
+            self.updates += 1
+            if deferred:
+                self.updates_deferred += 1
+            if retired:
+                self.stores_retired += 1
+            if stats is not None:
+                self.plans_rebuilt += stats.get("plans_rebuilt", 0)
+                self.packed_lanes_reused += stats.get(
+                    "packed_lanes_reused", 0)
+                self.packed_lanes_repacked += stats.get(
+                    "packed_lanes_repacked", 0)
+                self.packed_bytes_reused += stats.get(
+                    "packed_bytes_reused", 0)
+            self._stage["update"].add(t_ms)
+
+    def record_update_failure(self) -> None:
+        with self._lock:
+            self.update_failures += 1
 
     def record_done(self, m: RequestMetrics) -> None:
         with self._lock:
@@ -167,6 +200,14 @@ class ServiceMetrics:
                 "plan_misses": self.plan_misses,
                 "store_evictions": self.store_evictions,
                 "executor_evictions": self.executor_evictions,
+                "updates": self.updates,
+                "update_failures": self.update_failures,
+                "updates_deferred": self.updates_deferred,
+                "stores_retired": self.stores_retired,
+                "plans_rebuilt": self.plans_rebuilt,
+                "packed_lanes_reused": self.packed_lanes_reused,
+                "packed_lanes_repacked": self.packed_lanes_repacked,
+                "packed_bytes_reused": self.packed_bytes_reused,
                 "queue_depth": self.queue_depth,
             }
             for s in self.STAGES:

@@ -26,6 +26,7 @@ Submission by fingerprint (no graph payload on the hot path)::
 from __future__ import annotations
 
 import collections
+import dataclasses
 import queue
 import threading
 import time
@@ -40,13 +41,75 @@ from ..core.planner import PlanConfig
 from ..core.store import GraphStore
 from ..core.types import Geometry
 from ..graphs.formats import Graph
+from ..streaming import (GraphDelta, apply_delta, apply_delta_to_graph,
+                         chain_fingerprint)
 from .fingerprint import StoreKey, resolve_fingerprint, store_key
 from .metrics import RequestMetrics, ServiceMetrics
 from .store_cache import GraphStoreCache
 
-__all__ = ["GraphService", "RequestHandle", "ServiceClosed"]
+__all__ = ["GraphService", "RequestHandle", "ServiceClosed", "UpdateResult"]
 
 _SENTINEL = object()
+
+
+class _LazyGraph:
+    """Registry entry for a delta-chained snapshot: the post-delta graph
+    is materialized (base graph + delta replay) only if a rebuild is
+    actually needed — a store eviction followed by a fingerprint-only
+    resubmit — so the update hot path never pays the full-graph apply.
+    Once materialized, the chain link collapses to the graph and drops
+    its base/delta references."""
+
+    _MAT_LOCK = threading.Lock()   # materialization is rare; one lock
+                                   # keeps multi-node chain walks simple
+
+    __slots__ = ("_base", "_delta", "_graph")
+
+    def __init__(self, base, delta: GraphDelta):
+        self._base = base          # Graph | _LazyGraph
+        self._delta = delta
+        self._graph: Optional[Graph] = None
+
+    def materialize(self) -> Graph:
+        with self._MAT_LOCK:
+            if self._graph is None:
+                stack = [self]
+                base = self._base
+                while isinstance(base, _LazyGraph) and base._graph is None:
+                    stack.append(base)
+                    base = base._base
+                g = base._graph if isinstance(base, _LazyGraph) else base
+                for node in reversed(stack):
+                    # chained fps are identity, not content: skip fp check
+                    g = apply_delta_to_graph(g, node._delta, check_fp=False)
+                    node._graph = g
+                    node._base = node._delta = None
+            return self._graph
+
+
+@dataclasses.dataclass
+class UpdateResult:
+    """Outcome of :meth:`GraphService.update`.
+
+    fingerprint: the NEW chained snapshot fingerprint — submit against
+        this from now on.
+    mode: ``"incremental"`` (cached store spliced in place) or
+        ``"deferred"`` (store wasn't cached; the delta was validated
+        and applied at graph level, and the STORE builds on the next
+        cold submit).
+    retired: what happened to the old snapshot's cache entry
+        (``"now"`` / ``"deferred"`` until in-flight leases drain /
+        ``"absent"``).
+    stats: the :class:`~repro.streaming.DeltaApplyResult` accounting
+        (None when deferred).
+    """
+
+    fingerprint: str
+    base_fingerprint: str
+    mode: str
+    retired: str
+    stats: Optional[dict]
+    t_update_ms: float
 
 
 class ServiceClosed(RuntimeError):
@@ -192,7 +255,13 @@ class GraphService:
         self.metrics._queue_depth_fn = self._queue.qsize
         self._lock = threading.Lock()
         self._inflight: Dict[tuple, _Job] = {}
-        self._registry: Dict[str, Graph] = {}   # fp -> graph (rebuilds)
+        # fp -> Graph | _LazyGraph (delta chain); enables cold rebuilds
+        self._registry: Dict[str, object] = {}
+        # skey -> count of queued/executing jobs; update() defers store
+        # retirement while any exist, so even jobs still WAITING in the
+        # queue (not yet lease-pinned) finish on the old snapshot
+        self._skey_jobs: Dict[StoreKey, int] = {}
+        self._retire_pending: set = set()
         self._next_id = 0
         self._closed = False
         self._workers = [
@@ -244,7 +313,8 @@ class GraphService:
                        else use_dbg)
             skey = store_key(fp, geom, use_dbg)
             self.cache.get_or_build(
-                skey, lambda: self._build_store(graph, geom, use_dbg))
+                skey, lambda: self._build_store(graph, geom, use_dbg,
+                                                fp=fp))
         return fp
 
     def unregister(self, fingerprint: str) -> bool:
@@ -253,6 +323,144 @@ class GraphService:
         registry afterwards). Returns whether it was registered."""
         with self._lock:
             return self._registry.pop(fingerprint, None) is not None
+
+    # -- streaming updates ----------------------------------------------
+    def update(self, fingerprint: str, delta: GraphDelta, *,
+               geom: Optional[Geometry] = None,
+               use_dbg: Optional[bool] = None,
+               keep_base: bool = False) -> UpdateResult:
+        """Apply a :class:`~repro.streaming.GraphDelta` to a served
+        graph and re-key the store cache to the new chained snapshot
+        fingerprint.
+
+        Snapshot semantics: the base store is never mutated — requests
+        against the OLD fingerprint that are executing *or still
+        waiting in the queue* at update time finish against the old
+        snapshot; its cache entry is retired once the last of them
+        drains (lease pins cover executing work, a per-key job count
+        covers queued work). Submits against the returned
+        ``UpdateResult.fingerprint`` see the post-delta graph, warm
+        from the incremental apply (clean blockings, cached plans
+        rebuilt from carried-over per-partition stats, untouched lanes'
+        packed device payloads reused). An old-fingerprint submit that
+        races the retirement itself may still lose the store; the
+        worker then rebuilds it when the Graph is known (submitted or
+        registered) and fails the request with a clear KeyError
+        otherwise.
+
+        When the base store is cached the delta is applied
+        incrementally in the CALLER's thread (store builds queue behind
+        workers; a splice is milliseconds and callers usually want the
+        new fingerprint synchronously). When it is not cached but the
+        base graph is registered, the update is *deferred*: the delta
+        is validated and applied at graph level (so a bad delta fails
+        here, never on a later submit) and the store itself builds only
+        if a cold submit needs it. Two updates racing on one base both
+        succeed and branch the snapshot lineage (like git commits);
+        neither invalidates the other.
+
+        ``keep_base=False`` (default) drops the base fingerprint from
+        the registry — the base Graph object itself stays referenced by
+        the delta chain, so memory grows only by the (small) deltas.
+        A base that was never registered still gets its lineage
+        anchored (on the store's own source graph), so the chained
+        fingerprint remains rebuildable after eviction.
+        """
+        if delta.base_fp != fingerprint:
+            raise ValueError(
+                f"delta targets snapshot {delta.base_fp[:12]}… but "
+                f"update() was called for {fingerprint[:12]}…")
+        geom = geom or self.default_geom
+        use_dbg = self.default_use_dbg if use_dbg is None else bool(use_dbg)
+        old_key = store_key(fingerprint, geom, use_dbg)
+        t0 = time.perf_counter()
+
+        with self._lock:
+            if self._closed:
+                raise ServiceClosed("update() after close()")
+            base_entry = self._registry.get(fingerprint)
+
+        result = None
+        base_src = None
+        if old_key in self.cache:
+            try:
+                with self.cache.lease(old_key) as (store, _hit):
+                    result = apply_delta(store, delta)
+                    # lineage anchor for UNREGISTERED bases: a root
+                    # store still knows its source Graph, and capturing
+                    # it keeps the chained fingerprint rebuildable after
+                    # eviction (a content-hash re-register could never
+                    # re-associate with the chained identity)
+                    base_src = store.source
+            except KeyError:
+                result = None       # eviction raced us: defer instead
+            except Exception:
+                self.metrics.record_update_failure()
+                raise
+        if result is None and base_entry is None:
+            self.metrics.record_update_failure()
+            raise KeyError(
+                f"cannot update {fingerprint[:12]}…: store not cached and "
+                f"graph not registered — register() it or submit a Graph "
+                f"first")
+
+        new_fp = (result.fingerprint if result is not None
+                  else chain_fingerprint(fingerprint, delta.fingerprint()))
+        retired = "absent"
+        post_graph: Optional[Graph] = None
+        if result is not None:
+            self.cache.put(store_key(new_fp, geom, use_dbg), result.store)
+            # the old snapshot drains out; its executors are purged by
+            # the eviction hook when the entry actually goes. Jobs still
+            # WAITING in the queue against the old key haven't leased
+            # the store yet, so retirement is deferred until the last of
+            # them finishes (_finish fires it) — queue wait never turns
+            # a legal old-snapshot request into a miss.
+            with self._lock:
+                busy = self._skey_jobs.get(old_key, 0) > 0
+                if busy:
+                    self._retire_pending.add(old_key)
+            retired = "deferred" if busy else self.cache.retire(old_key)
+        else:
+            # deferred: no cached store to splice, so validate + apply
+            # at graph level NOW (much cheaper than a store build). An
+            # invalid delta must fail THIS call — recording it
+            # unvalidated would poison the lineage: every later cold
+            # submit against new_fp would fail inside a worker with no
+            # way to recover the dropped base fingerprint.
+            base_graph = (base_entry.materialize()
+                          if isinstance(base_entry, _LazyGraph)
+                          else base_entry)
+            try:
+                post_graph = apply_delta_to_graph(base_graph, delta,
+                                                  check_fp=False)
+            except Exception:
+                self.metrics.record_update_failure()
+                raise
+        with self._lock:
+            # incremental updates register a lazy chain (already
+            # validated by apply_delta; materialized only if a cold
+            # rebuild needs it) — anchored on the registry entry when
+            # the base was registered, else on the root store's source
+            # graph; deferred updates register the post-delta graph
+            # they just materialized
+            anchor = base_entry if base_entry is not None else base_src
+            if post_graph is not None:
+                self._registry[new_fp] = post_graph
+            elif anchor is not None:
+                self._registry[new_fp] = _LazyGraph(anchor, delta)
+            if base_entry is not None and not keep_base:
+                self._registry.pop(fingerprint, None)
+
+        t_ms = (time.perf_counter() - t0) * 1e3
+        stats = result.stats if result is not None else None
+        self.metrics.record_update(
+            t_ms, stats, deferred=result is None,
+            retired=retired in ("now", "deferred"))
+        return UpdateResult(
+            fingerprint=new_fp, base_fingerprint=fingerprint,
+            mode="incremental" if result is not None else "deferred",
+            retired=retired, stats=stats, t_update_ms=t_ms)
 
     def _on_store_evicted(self, skey: StoreKey, store: GraphStore) -> None:
         """Cache-eviction hook: purge the evicted store's executors so
@@ -287,12 +495,18 @@ class GraphService:
             self.metrics.record_executor_eviction(evicted)
 
     def _build_store(self, graph: Graph, geom: Geometry = None,
-                     use_dbg: bool = None) -> GraphStore:
+                     use_dbg: bool = None,
+                     fp: Optional[str] = None) -> GraphStore:
+        # fp pins the store's identity to the SERVICE's key: a store
+        # rebuilt from a materialized delta chain must keep the chained
+        # fingerprint (deltas validate against it), not the content
+        # hash of the materialized graph
         return GraphStore(
             graph,
             geom=geom or self.default_geom,
             use_dbg=self.default_use_dbg if use_dbg is None else use_dbg,
-            max_plans=self.max_plans_per_store)
+            max_plans=self.max_plans_per_store,
+            fingerprint=fp)
 
     # -- submission -----------------------------------------------------
     def submit(self, graph: Union[Graph, str, None] = None,
@@ -369,6 +583,7 @@ class GraphService:
                            config, geom, use_dbg, max_iters, path)
                 job.handles.append(handle)
                 self._inflight[job_key] = job
+                self._skey_jobs[skey] = self._skey_jobs.get(skey, 0) + 1
                 self._queue.put(job)
         self.metrics.record_submit(coalesced)
         return handle
@@ -393,11 +608,15 @@ class GraphService:
         t_queue_ms = (t_pickup - job.t_submit) * 1e3
 
         def builder():
-            if job.graph is None:
+            g = job.graph
+            if g is None:
                 raise KeyError(
                     f"store for {job.skey[0][:12]}… was evicted and the "
                     f"graph is not registered; re-submit with the Graph")
-            return self._build_store(job.graph, job.geom, job.use_dbg)
+            if isinstance(g, _LazyGraph):   # replay the delta chain
+                g = g.materialize()
+            return self._build_store(g, job.geom, job.use_dbg,
+                                     fp=job.skey[0])
 
         # max_iters is a run() argument, not executor state, so it is
         # deliberately absent from the executor key (unlike the job key)
@@ -443,9 +662,22 @@ class GraphService:
         # unlink and snapshot the handle list atomically: a twin either
         # attaches before this (and is resolved below) or finds the job
         # gone and starts a fresh execution — never lost in between
+        do_retire = False
         with self._lock:
             self._inflight.pop(job.key, None)
             handles = list(job.handles)
+            left = self._skey_jobs.get(job.skey, 1) - 1
+            if left <= 0:
+                self._skey_jobs.pop(job.skey, None)
+                if job.skey in self._retire_pending:
+                    self._retire_pending.discard(job.skey)
+                    do_retire = True   # last old-snapshot job drained
+            else:
+                self._skey_jobs[job.skey] = left
+        if do_retire:
+            # outside the service lock: retirement may evict and the
+            # eviction hook re-enters the lock
+            self.cache.retire(job.skey)
         now = time.perf_counter()
         for h in handles:
             m = h.metrics

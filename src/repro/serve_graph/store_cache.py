@@ -31,7 +31,7 @@ __all__ = ["GraphStoreCache"]
 
 
 class _Entry:
-    __slots__ = ("store", "nbytes", "pins", "ready")
+    __slots__ = ("store", "nbytes", "pins", "ready", "retired")
 
     def __init__(self, store: Optional[GraphStore], nbytes: int):
         self.store = store
@@ -40,6 +40,9 @@ class _Entry:
         # unset while a lease() builder is constructing the store OUTSIDE
         # the cache lock; waiters block on it instead of on the lock
         self.ready = threading.Event()
+        # retire(): evict as soon as the last lease releases (streaming
+        # re-key — the old snapshot drains, it is never torn down)
+        self.retired = False
         if store is not None:
             self.ready.set()
 
@@ -73,6 +76,7 @@ class GraphStoreCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.freed_plan_bytes = 0   # device bytes released by evictions
 
     # -- core ops -------------------------------------------------------
     def __len__(self) -> int:
@@ -187,6 +191,9 @@ class GraphStoreCache:
             with self._lock:
                 e.pins -= 1
                 e.nbytes = nbytes
+                if (e.retired and e.pins == 0
+                        and self._entries.get(key) is e):
+                    self._evict_one(key)   # deferred retire: drained now
                 self._evict_as_needed()
 
     def _acquire(self, key: StoreKey, builder) -> Tuple[_Entry, bool, bool]:
@@ -235,6 +242,27 @@ class GraphStoreCache:
             self._evict_one(key)
             return True
 
+    def retire(self, key: StoreKey) -> str:
+        """Streaming re-key: evict ``key`` as soon as it is unpinned.
+        Unlike :meth:`evict`, a pinned (or still-building) entry is not
+        skipped but *marked* — the last lease release evicts it, so
+        in-flight requests finish against the old snapshot and the
+        entry disappears the moment it drains. A re-lease racing the
+        drain simply extends it: the old fingerprint remains a valid
+        identity for the old graph until the entry actually goes.
+
+        Returns ``"now"`` (evicted immediately), ``"deferred"``
+        (pinned/building; will evict on drain) or ``"absent"``."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                return "absent"
+            if e.pins == 0 and e.ready.is_set():
+                self._evict_one(key)
+                return "now"
+            e.retired = True
+            return "deferred"
+
     def clear(self) -> int:
         with self._lock:
             n = 0
@@ -252,7 +280,7 @@ class GraphStoreCache:
     def _evict_one(self, key: StoreKey) -> None:
         e = self._entries.pop(key)
         if e.store is not None:    # release device-resident lane entries
-            e.store.clear_plans()
+            self.freed_plan_bytes += e.store.clear_plans()["freed_bytes"]
         self.evictions += 1
         if self.on_evict is not None:
             self.on_evict(key, e.store)
@@ -293,6 +321,7 @@ class GraphStoreCache:
                 "hits": self.hits,
                 "misses": self.misses,
                 "evictions": self.evictions,
+                "freed_plan_bytes": self.freed_plan_bytes,
                 "hit_rate": (self.hits / (self.hits + self.misses)
                              if (self.hits + self.misses) else 0.0),
                 "pinned": sum(1 for e in self._entries.values()

@@ -1,0 +1,22 @@
+"""Streaming graphs: delta updates with dirty-range incremental rebuild.
+
+The static layers (GraphStore → Planner → Executor) prepare a graph
+once; this package is the sanctioned way a prepared graph CHANGES.
+A :class:`GraphDelta` (validated add/remove/update edge lists against a
+base fingerprint) applied with :func:`apply_delta` re-partitions and
+re-blocks only the dirty dst-range partitions, splices them into a
+derived store, chains the snapshot fingerprint from
+``(base_fp, delta_fp)``, and carries over every clean blocking and
+every structurally-unchanged lane's packed device payload. The serving
+layer surfaces it as ``GraphService.update(fp, delta)`` with snapshot
+semantics (in-flight requests finish on the old store; new submits see
+the new fingerprint).
+"""
+from .apply import DeltaApplyResult, apply_delta
+from .delta import (GraphDelta, apply_delta_to_graph, chain_fingerprint,
+                    edge_keys, make_delta, random_delta)
+
+__all__ = [
+    "DeltaApplyResult", "GraphDelta", "apply_delta", "apply_delta_to_graph",
+    "chain_fingerprint", "edge_keys", "make_delta", "random_delta",
+]

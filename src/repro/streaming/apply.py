@@ -1,0 +1,307 @@
+"""Incremental GraphStore rebuild under a GraphDelta (dirty ranges only).
+
+A cold :class:`~repro.core.store.GraphStore` build pays DBG, a full
+edge lexsort, per-partition stats, and (through the first plans) the
+Little/Big brick blockings. A delta touches few destination-range
+partitions, so :func:`apply_delta` redoes only those:
+
+  1. map the delta's edges through the store's FROZEN permutation and
+     bucket them by dst-range partition — the touched set is "dirty";
+  2. for each dirty partition, merge the delta into its (src, dst)-
+     sorted segment with searchsorted splices (no sort of clean data)
+     and recompute its :class:`PartitionInfo` via the same helper the
+     cold build uses;
+  3. splice the new segments between the untouched ones (one
+     concatenate per array — memcpy, not sort) into a *derived* store
+     that shares the base's permutation and every clean blocking;
+  4. rebuild each cached plan against the new stats (clean partitions
+     keep bit-identical stats, so re-classification and re-scheduling
+     are milliseconds) and seed structurally-unchanged lanes with the
+     pre-delta packed device payloads — untouched lanes are neither
+     re-packed nor re-uploaded;
+  5. chain the new snapshot fingerprint from ``(base_fp, delta_fp)``.
+
+The permutation is frozen across a delta chain (recomputing DBG would
+dirty every partition); under heavy churn DBG quality decays slowly and
+a full re-registration re-optimizes it. Equivalence guarantee: the
+derived store's edge arrays, partition stats, blockings, plans and app
+results are bit-identical to a cold ``GraphStore(post_graph,
+perm=base.perm)`` build (tests/test_streaming.py holds this for all
+five builtin apps on both ref and pallas-interpret paths). A cold build
+that recomputes DBG from the post-delta degrees may instead differ by
+reduction order (1-ULP drift in 'sum' apps) — identical for min/or/max.
+
+The base store is never mutated: in-flight executors keep running
+against the old snapshot while the serving layer re-keys its cache to
+the new fingerprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from ..core import partition as part
+from ..core.store import GraphStore
+from ..graphs.formats import Graph, freeze
+from .delta import (GraphDelta, _validate_against, chain_fingerprint,
+                    edge_keys, locate_edges)
+
+__all__ = ["apply_delta", "DeltaApplyResult"]
+
+
+@dataclasses.dataclass
+class DeltaApplyResult:
+    """Outcome of one incremental apply: the derived store, its chained
+    snapshot fingerprint, and the reuse/invalidation accounting the
+    serving metrics aggregate."""
+
+    store: GraphStore
+    fingerprint: str
+    base_fingerprint: str
+    dirty_pids: Tuple[int, ...]
+    stats: dict
+
+
+def _orig_edge(store: GraphStore, s_dbg: int, d_dbg: int) -> str:
+    """Original-id rendering of a DBG-space edge (error messages)."""
+    inv = np.argsort(store.perm)
+    return f"({int(inv[s_dbg])} -> {int(inv[d_dbg])})"
+
+
+def _merge_segment(store: GraphStore, s, d, w,
+                   adds, removes, updates, weighted: bool):
+    """Merge one dirty partition's delta into its (src, dst)-sorted
+    segment. Pure searchsorted/mask/insert — O(segment + changes), no
+    sort of pre-existing edges. Validates existence/absence exactly."""
+    key = edge_keys(s, d)
+
+    def _missing(what, ks, kd):
+        return lambda i: (f"delta {what} targets edge "
+                          f"{_orig_edge(store, int(ks[i]), int(kd[i]))} "
+                          f"which is not in the base graph")
+
+    w = w.copy()
+    u_src, u_dst, u_w = updates
+    if u_src.size:
+        pos = locate_edges(key, edge_keys(u_src, u_dst),
+                           _missing("update", u_src, u_dst))
+        w[pos] = u_w
+
+    keep = np.ones(key.shape[0], dtype=bool)
+    r_src, r_dst = removes
+    if r_src.size:
+        pos = locate_edges(key, edge_keys(r_src, r_dst),
+                           _missing("remove", r_src, r_dst))
+        keep[pos] = False
+
+    s_k, d_k, w_k = s[keep], d[keep], w[keep]
+    a_src, a_dst, a_w = adds
+    if a_src.size:
+        ka = edge_keys(a_src, a_dst)
+        order = np.argsort(ka)       # np.insert keeps given order within
+        a_src, a_dst, ka = a_src[order], a_dst[order], ka[order]
+        a_w = a_w[order] if weighted else np.zeros(a_src.shape[0],
+                                                   np.float32)
+        kept_key = key[keep]
+        ins = np.searchsorted(kept_key, ka)
+        if kept_key.size:
+            at = np.minimum(ins, kept_key.shape[0] - 1)
+            present = kept_key[at] == ka
+            if np.any(present):
+                i = int(np.argmax(present))
+                raise ValueError(
+                    f"delta adds edge "
+                    f"{_orig_edge(store, int(a_src[i]), int(a_dst[i]))} "
+                    f"which already exists in the base graph (use an "
+                    f"update to change its weight)")
+        s_k = np.insert(s_k, ins, a_src)
+        d_k = np.insert(d_k, ins, a_dst)
+        w_k = np.insert(w_k, ins, a_w)
+    return s_k, d_k, w_k
+
+
+def _lane_signature(lane, big_works) -> tuple:
+    """Structural identity of one lane's packed payload: the entry
+    list's (work identity, block range) sequence. Payload content is a
+    pure function of this plus the underlying blockings, so a matching
+    signature over clean partitions means the packed device arrays are
+    bit-identical and can be carried over without re-upload."""
+    return tuple(
+        ((("little", e.work_id) if e.kind == "little"
+          else ("big",) + tuple(big_works[e.work_id].pids)),
+         e.block_lo, e.block_hi)
+        for e in lane)
+
+
+def _lane_pids(lane, big_works) -> set:
+    pids = set()
+    for e in lane:
+        if e.kind == "little":
+            pids.add(e.work_id)
+        else:
+            pids.update(big_works[e.work_id].pids)
+    return pids
+
+
+def apply_delta(store: GraphStore, delta: GraphDelta) -> DeltaApplyResult:
+    """Apply a :class:`GraphDelta` to a prepared store incrementally.
+
+    Returns a :class:`DeltaApplyResult` whose ``store`` is a NEW
+    derived :class:`GraphStore` (the base is left untouched as the old
+    snapshot) and whose ``stats`` record exactly what was reused:
+    blockings and per-partition stats of clean partitions, and — for
+    every plan cached on the base — the packed device payloads of lanes
+    whose structure survived re-scheduling.
+    """
+    t0 = time.perf_counter()
+    base_fp = store.fingerprint()
+    if delta.base_fp != base_fp:
+        raise ValueError(
+            f"delta targets snapshot {delta.base_fp[:12]}… but the store's "
+            f"fingerprint is {base_fp[:12]}…")
+
+    g = store.graph
+    V = g.num_vertices
+    weighted = g.weights is not None
+    _validate_against(g, delta)   # range + weights-shape, shared oracle
+
+    # -- 1. relabel into the frozen DBG id space & bucket by partition --
+    perm, U = store.perm, store.geom.U
+    a_src, a_dst = perm[delta.add_src], perm[delta.add_dst]
+    r_src, r_dst = perm[delta.remove_src], perm[delta.remove_dst]
+    u_src, u_dst = perm[delta.update_src], perm[delta.update_dst]
+    a_pid, r_pid, u_pid = a_dst // U, r_dst // U, u_dst // U
+    dirty = np.unique(np.concatenate([a_pid, r_pid, u_pid]))
+    dirty_set = set(int(p) for p in dirty)
+
+    # -- 2./3. merge dirty segments, splice, recompute dirty stats -----
+    num_parts = len(store.infos)
+    seg_src: List[np.ndarray] = []
+    seg_dst: List[np.ndarray] = []
+    seg_w: List[np.ndarray] = []
+    new_infos = []
+    off = 0
+    for p in range(num_parts):
+        info = store.infos[p]
+        lo, hi = info.edge_lo, info.edge_hi
+        if p in dirty_set:
+            m_a, m_r, m_u = a_pid == p, r_pid == p, u_pid == p
+            s, d, w = _merge_segment(
+                store,
+                store.edges["src"][lo:hi], store.edges["dst"][lo:hi],
+                store.edges["weights"][lo:hi],
+                (a_src[m_a], a_dst[m_a],
+                 delta.add_weights[m_a] if weighted and delta.num_adds
+                 else None),
+                (r_src[m_r], r_dst[m_r]),
+                (u_src[m_u], u_dst[m_u], delta.update_weights[m_u]),
+                weighted)
+            new_infos.append(part.partition_info(p, s, d, off, V,
+                                                 store.geom))
+        else:
+            s = store.edges["src"][lo:hi]
+            d = store.edges["dst"][lo:hi]
+            w = store.edges["weights"][lo:hi]
+            new_infos.append(dataclasses.replace(
+                info, edge_lo=off, edge_hi=off + (hi - lo)))
+        seg_src.append(s)
+        seg_dst.append(d)
+        seg_w.append(w)
+        off += s.shape[0]
+
+    if dirty_set:
+        edges = {"src": np.concatenate(seg_src),
+                 "dst": np.concatenate(seg_dst),
+                 "weights": np.concatenate(seg_w)}
+        infos = new_infos
+    else:                      # empty delta: share everything
+        edges = store.edges
+        infos = list(store.infos)
+
+    # the derived graph aliases the partition-sorted edge arrays
+    # (zero-copy; NOT canonical (src, dst) order — use
+    # apply_delta_to_graph for a canonical post-delta Graph). The store
+    # only consumes it for order-independent quantities (V/E, degree
+    # counts, byte accounting).
+    new_graph = freeze(Graph(
+        num_vertices=V, src=edges["src"], dst=edges["dst"],
+        weights=edges["weights"] if weighted else None,
+        name=g.name + "+d"))
+
+    new_fp = chain_fingerprint(base_fp, delta.fingerprint())
+    # snapshot under the plan lock: workers planning on the leased base
+    # store insert blockings into these dicts concurrently (Planner.build
+    # runs under the same lock), and iterating them bare would race
+    with store._plan_lock:
+        little_carried = {pid: w for pid, w in store._little_cache.items()
+                          if pid not in dirty_set}
+        big_carried = {pids: w for pids, w in store._big_cache.items()
+                       if not (set(pids) & dirty_set)}
+        n_little_base = len(store._little_cache)
+        n_big_base = len(store._big_cache)
+    t_splice = time.perf_counter() - t0
+
+    new_store = GraphStore._derived(
+        store, graph=new_graph, infos=infos, edges=edges,
+        little_cache=little_carried, big_cache=big_carried,
+        fingerprint=new_fp, t_partition=t_splice)
+
+    # -- 4. rebuild cached plans; carry packed payloads of clean lanes --
+    t1 = time.perf_counter()
+    with store._plan_lock:
+        old_bundles = list(store._plan_cache.values())
+    plans_rebuilt = 0
+    packed_reused = packed_repacked = 0
+    packed_bytes_reused = 0
+    for old in old_bundles:
+        bundle = new_store.plan(old.config)
+        plans_rebuilt += 1
+        old_packed = old._packed_lanes       # snapshot (flips once)
+        if old_packed is None:
+            continue                          # base never materialized it
+        sig_to_lane = {}
+        for j, lane in enumerate(old.plan.lanes):
+            sig = _lane_signature(lane, old.big_works)
+            if sig:                           # empty lanes pack for free
+                sig_to_lane.setdefault(sig, j)
+        seed = {}
+        for i, lane in enumerate(bundle.plan.lanes):
+            sig = _lane_signature(lane, bundle.big_works)
+            j = sig_to_lane.get(sig)
+            if (j is not None
+                    and not (_lane_pids(lane, bundle.big_works)
+                             & dirty_set)):
+                seed[i] = old_packed[j]
+        bundle._packed_seed = seed or None
+        packed = bundle.packed_lanes()        # eager: keep serving warm
+        packed_reused += bundle.packed_lanes_reused
+        packed_bytes_reused += bundle.packed_bytes_reused
+        packed_repacked += (sum(1 for lane in packed if lane)
+                            - bundle.packed_lanes_reused)
+    t_replan = time.perf_counter() - t1
+
+    stats = {
+        "num_adds": delta.num_adds,
+        "num_removes": delta.num_removes,
+        "num_updates": delta.num_updates,
+        "partitions": num_parts,
+        "dirty_partitions": len(dirty_set),
+        "little_blockings_reused": len(little_carried),
+        "little_blockings_dropped": n_little_base - len(little_carried),
+        "big_blockings_reused": len(big_carried),
+        "big_blockings_dropped": n_big_base - len(big_carried),
+        "plans_rebuilt": plans_rebuilt,
+        "packed_lanes_reused": packed_reused,
+        "packed_lanes_repacked": packed_repacked,
+        "packed_bytes_reused": int(packed_bytes_reused),
+        "t_splice_ms": t_splice * 1e3,
+        "t_replan_ms": t_replan * 1e3,
+        "t_apply_ms": (time.perf_counter() - t0) * 1e3,
+    }
+    return DeltaApplyResult(store=new_store, fingerprint=new_fp,
+                            base_fingerprint=base_fp,
+                            dirty_pids=tuple(int(p) for p in dirty),
+                            stats=stats)

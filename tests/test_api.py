@@ -121,7 +121,9 @@ def test_compile_convenience(weighted_graph):
 def test_store_clear_plans(weighted_graph):
     store = api.GraphStore(weighted_graph, geom=GEOM)
     b1 = store.plan(api.PlanConfig(n_lanes=2))
-    assert store.clear_plans() == 1
+    cleared = store.clear_plans()
+    assert cleared["plans"] == 1
+    assert cleared["freed_bytes"] >= 0
     b2 = store.plan(api.PlanConfig(n_lanes=2))
     assert b2 is not b1, "cleared plans must rebuild"
     # blockings survive the clear (re-planning stays cheap)

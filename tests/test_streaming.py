@@ -1,0 +1,546 @@
+"""Streaming graph tests: GraphDelta validation, incremental-vs-cold
+bit-identical equivalence (all five apps, ref and pallas-interpret),
+packed-payload reuse accounting, snapshot immutability, and the
+GraphService.update serving integration."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.planner import PlanConfig
+from repro.core.store import GraphStore
+from repro.core.types import Geometry
+from repro.graphs.formats import from_edges
+from repro.graphs.rmat import rmat
+from repro.serve_graph.fingerprint import store_key
+from repro.streaming import (apply_delta, apply_delta_to_graph,
+                             chain_fingerprint, make_delta, random_delta)
+
+GEOM = Geometry(U=256, W=128, T=128, E_BLK=128, big_batch=2)
+CFG = PlanConfig(n_lanes=4)
+
+APPS = [
+    ("pagerank", {}),
+    ("bfs", {"root": 0}),
+    ("sssp", {"root": 0}),
+    ("wcc", {}),
+    ("closeness", {"sources": np.arange(4)}),
+]
+
+
+@pytest.fixture(scope="module")
+def wgraph():
+    return rmat(11, 8, seed=3, weighted=True)   # 2048 V -> 8 partitions
+
+
+@pytest.fixture(scope="module")
+def wstore(wgraph):
+    return GraphStore(wgraph, geom=GEOM)
+
+
+def _run(store, app, kw, path, max_iters=5):
+    a = api.BUILTIN_APPS[app](**kw)
+    return api.compile(None, a, store=store, config=CFG,
+                       path=path).run(max_iters=max_iters)[0]
+
+
+# ---------------------------------------------------------------------------
+# Graph immutability (satellite: deltas are the only mutation path)
+# ---------------------------------------------------------------------------
+
+def test_graph_arrays_are_immutable(wgraph):
+    for arr in (wgraph.src, wgraph.dst, wgraph.weights):
+        with pytest.raises(ValueError):
+            arr[0] = 1
+    g2 = from_edges([0, 1, 2], [1, 2, 0])
+    with pytest.raises(ValueError):
+        g2.src[0] = 5
+    with pytest.raises(ValueError):
+        g2.reversed().dst[0] = 5
+    # frozen arrays make the cached fingerprint trustworthy
+    fp = g2.fingerprint()
+    assert g2.fingerprint() == fp
+
+
+# ---------------------------------------------------------------------------
+# GraphDelta format validation
+# ---------------------------------------------------------------------------
+
+def test_make_delta_rejects_bad_input():
+    fp = "ab" * 16
+    with pytest.raises(ValueError):        # duplicate within a list
+        make_delta(fp, add=([0, 0], [1, 1]))
+    with pytest.raises(ValueError):        # same edge in add AND remove
+        make_delta(fp, add=([0], [1]), remove=([0], [1]))
+    with pytest.raises(ValueError):        # same edge in remove AND update
+        make_delta(fp, remove=([0], [1]), update=([0], [1], [0.5]))
+    with pytest.raises(ValueError):        # update without weights
+        make_delta(fp, update=([0], [1]))
+    with pytest.raises(ValueError):        # negative ids
+        make_delta(fp, add=([-1], [1]))
+    with pytest.raises(ValueError):        # mismatched lengths
+        make_delta(fp, add=([0, 1], [1]))
+    with pytest.raises(ValueError):        # empty fingerprint
+        make_delta("", add=([0], [1]))
+    d = make_delta(fp)                     # empty delta is legal
+    assert d.num_changes == 0
+
+
+def test_make_delta_never_freezes_caller_buffers():
+    """make_delta freezes ITS arrays; a caller's reusable int32/float32
+    buffers must stay writable afterwards."""
+    s = np.array([0, 1], np.int32)
+    d = np.array([1, 2], np.int32)
+    w = np.array([0.1, 0.2], np.float32)
+    delta = make_delta("ab" * 16, add=(s, d, w))
+    s[0] = 5
+    d[0] = 6
+    w[0] = 0.9                              # no ValueError: buffers ours
+    assert delta.add_src[0] == 0, "delta kept its own frozen copy"
+
+
+def test_delta_fingerprint_and_chaining():
+    fp = "cd" * 16
+    d1 = make_delta(fp, add=([0], [1]))
+    d2 = make_delta(fp, add=([0], [2]))
+    assert d1.fingerprint() == d1.fingerprint()
+    assert d1.fingerprint() != d2.fingerprint()
+    # same edit against a different base snapshot hashes differently
+    d3 = make_delta("ef" * 16, add=([0], [1]))
+    assert d1.fingerprint() != d3.fingerprint()
+    c = chain_fingerprint(fp, d1.fingerprint())
+    assert c == chain_fingerprint(fp, d1.fingerprint())
+    assert c != fp and len(c) == len(fp)
+    # delta arrays are frozen like graph arrays
+    with pytest.raises(ValueError):
+        d1.add_src[0] = 7
+    # identity equality + hashable (value comparison via fingerprint)
+    assert d1 != make_delta(fp, add=([0], [1]))
+    assert len({d1, d2}) == 2
+
+
+def test_apply_strictness(wgraph, wstore):
+    fp = wgraph.fingerprint()
+    # removing a non-existent edge
+    keys = set(zip(wgraph.src.tolist(), wgraph.dst.tolist()))
+    s, d = next((a, b) for a in range(5) for b in range(2040, 2048)
+                if (a, b) not in keys and a != b)
+    bad_rm = make_delta(fp, remove=([s], [d]))
+    with pytest.raises(ValueError, match="not in the base graph"):
+        apply_delta_to_graph(wgraph, bad_rm)
+    with pytest.raises(ValueError, match="not in the base graph"):
+        apply_delta(wstore, bad_rm)
+    # adding an existing edge
+    bad_add = make_delta(fp, add=([int(wgraph.src[0])],
+                                  [int(wgraph.dst[0])],
+                                  [0.5]))
+    with pytest.raises(ValueError, match="already exists"):
+        apply_delta_to_graph(wgraph, bad_add)
+    with pytest.raises(ValueError, match="already exists"):
+        apply_delta(wstore, bad_add)
+    # wrong base fingerprint
+    wrong = make_delta("12" * 16, add=([s], [d], [0.5]))
+    with pytest.raises(ValueError, match="targets snapshot"):
+        apply_delta_to_graph(wgraph, wrong)
+    with pytest.raises(ValueError, match="targets snapshot"):
+        apply_delta(wstore, wrong)
+    # vertex growth is rejected
+    oob = make_delta(fp, add=([1], [wgraph.num_vertices], [0.5]))
+    with pytest.raises(ValueError, match="vertex growth"):
+        apply_delta(wstore, oob)
+    # unweighted base rejects weight updates
+    ug = rmat(8, 4, seed=2)
+    upd = make_delta(ug.fingerprint(),
+                     update=([int(ug.src[0])], [int(ug.dst[0])], [1.0]))
+    with pytest.raises(ValueError, match="unweighted"):
+        apply_delta_to_graph(ug, upd)
+
+
+def test_delta_roundtrip_restores_content(wgraph):
+    """Applying a churn delta and then its exact inverse restores the
+    original content fingerprint (content hashes are order-free)."""
+    d = random_delta(wgraph, churn=0.02, seed=11)
+    post = apply_delta_to_graph(wgraph, d)
+    assert post.fingerprint() != wgraph.fingerprint()
+    # inverse: remove what was added, re-add what was removed (with the
+    # original weights, recovered from the base graph)
+    keys = {(int(s), int(t)): float(w) for s, t, w in
+            zip(wgraph.src, wgraph.dst, wgraph.weights)}
+    back_w = [keys[(int(s), int(t))]
+              for s, t in zip(d.remove_src, d.remove_dst)]
+    inv = make_delta(post.fingerprint(),
+                     add=(d.remove_src, d.remove_dst, back_w),
+                     remove=(d.add_src, d.add_dst))
+    restored = apply_delta_to_graph(post, inv)
+    assert restored.fingerprint() == wgraph.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# Incremental apply == cold rebuild (the tentpole equivalence)
+# ---------------------------------------------------------------------------
+
+def _assert_stores_identical(inc, cold):
+    for k in ("src", "dst", "weights"):
+        assert np.array_equal(inc.edges[k], cold.edges[k]), k
+    assert inc.infos == cold.infos
+    assert inc.V_pad == cold.V_pad
+
+
+@pytest.mark.parametrize("churn,hot_frac,update_frac", [
+    (0.01, None, 0.0),       # uniform churn: every partition dirty
+    (0.01, 0.02, 0.005),     # degree-skewed churn + weight updates
+    (0.10, None, 0.0),       # heavy churn
+])
+def test_apply_matches_cold_rebuild(wgraph, wstore, churn, hot_frac,
+                                    update_frac):
+    delta = random_delta(wgraph, churn=churn, seed=17, hot_frac=hot_frac,
+                         update_frac=update_frac)
+    res = apply_delta(wstore, delta)
+    post = apply_delta_to_graph(wgraph, delta)
+    cold = GraphStore(post, geom=GEOM, perm=wstore.perm)
+    _assert_stores_identical(res.store, cold)
+    assert res.stats["dirty_partitions"] <= len(wstore.infos)
+    assert res.fingerprint == chain_fingerprint(wgraph.fingerprint(),
+                                                delta.fingerprint())
+
+
+@pytest.mark.parametrize("app,kw", APPS)
+def test_apps_bit_identical_ref(wgraph, wstore, app, kw):
+    """Delta-applied store runs every builtin app bit-identically to a
+    cold GraphStore on the post-delta graph (same frozen permutation)."""
+    delta = random_delta(wgraph, churn=0.02, seed=23, update_frac=0.005)
+    res = apply_delta(wstore, delta)
+    post = apply_delta_to_graph(wgraph, delta)
+    cold = GraphStore(post, geom=GEOM, perm=wstore.perm)
+    r_inc = _run(res.store, app, kw, "ref")
+    r_cold = _run(cold, app, kw, "ref")
+    assert np.array_equal(r_inc, r_cold), app
+
+
+@pytest.mark.parametrize("app,kw", APPS)
+def test_apps_bit_identical_pallas_interpret(app, kw):
+    """Same equivalence through the Pallas kernels (interpret on CPU).
+    Smaller graph: interpret mode is slow."""
+    g = rmat(9, 6, seed=5, weighted=True)   # 512 V -> 2 partitions
+    store = GraphStore(g, geom=GEOM)
+    delta = random_delta(g, churn=0.03, seed=29, update_frac=0.01)
+    res = apply_delta(store, delta)
+    post = apply_delta_to_graph(g, delta)
+    cold = GraphStore(post, geom=GEOM, perm=store.perm)
+    r_inc = _run(res.store, app, kw, "pallas", max_iters=3)
+    r_cold = _run(cold, app, kw, "pallas", max_iters=3)
+    assert np.array_equal(r_inc, r_cold), app
+
+
+def test_chained_deltas_stay_equivalent(wgraph):
+    """Three stacked deltas through apply_delta == oracle replay."""
+    store = GraphStore(wgraph, geom=GEOM)
+    graph, fp = wgraph, wgraph.fingerprint()
+    for seed in (31, 37, 41):
+        delta = random_delta(graph, churn=0.02, seed=seed, base_fp=fp)
+        res = apply_delta(store, delta)
+        graph = apply_delta_to_graph(graph, delta, check_fp=False)
+        store, fp = res.store, res.fingerprint
+        assert store.fingerprint() == fp
+    cold = GraphStore(graph, geom=GEOM, perm=store.perm)
+    _assert_stores_identical(store, cold)
+    assert np.array_equal(_run(store, "pagerank", {}, "ref"),
+                          _run(cold, "pagerank", {}, "ref"))
+
+
+def test_hypothesis_delta_equivalence():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    geom = Geometry(U=128, W=128, T=128, E_BLK=128, big_batch=2)
+
+    @hyp.settings(max_examples=20, deadline=None)
+    @hyp.given(data=st.data())
+    def prop(data):
+        # V >= 32 keeps the non-edge space ample for random_delta's
+        # rejection sampling (E is capped well below V*(V-1))
+        V = data.draw(st.integers(min_value=32, max_value=400), label="V")
+        n_edges = data.draw(st.integers(min_value=1, max_value=300),
+                            label="E")
+        rng = np.random.default_rng(
+            data.draw(st.integers(0, 2**31), label="seed"))
+        src = rng.integers(0, V, n_edges)
+        dst = rng.integers(0, V, n_edges)
+        w = rng.random(n_edges).astype(np.float32)
+        g = from_edges(src, dst, num_vertices=V, weights=w)
+        if g.num_edges == 0:
+            return
+        store = GraphStore(g, geom=geom)
+        churn = data.draw(st.floats(min_value=0.01, max_value=0.5),
+                          label="churn")
+        delta = random_delta(
+            g, churn=churn,
+            seed=data.draw(st.integers(0, 2**31), label="dseed"),
+            update_frac=data.draw(st.floats(0.0, 0.2), label="uf"))
+        res = apply_delta(store, delta)
+        post = apply_delta_to_graph(g, delta)
+        cold = GraphStore(post, geom=geom, perm=store.perm)
+        _assert_stores_identical(res.store, cold)
+        assert np.array_equal(
+            _run(res.store, "pagerank", {}, "ref", max_iters=3),
+            _run(cold, "pagerank", {}, "ref", max_iters=3))
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# Reuse accounting + snapshot semantics
+# ---------------------------------------------------------------------------
+
+def test_packed_payload_reuse_and_accounting():
+    g = rmat(13, 8, seed=7, weighted=True)   # 8192 V -> 32 partitions
+    store = GraphStore(g, geom=GEOM)
+    bundle = store.plan(CFG)
+    packed0 = bundle.packed_lanes()
+    delta = random_delta(g, churn=0.01, seed=13, hot_frac=0.01)
+    res = apply_delta(store, delta)
+    s = res.stats
+    assert s["dirty_partitions"] < s["partitions"] // 2, \
+        "skewed churn must localize (DBG groups hot vertices)"
+    assert s["plans_rebuilt"] == 1
+    assert s["packed_lanes_reused"] >= 1, "clean lanes must carry over"
+    assert s["packed_bytes_reused"] > 0
+    assert s["little_blockings_reused"] >= 1
+    # reused payload lists are the SAME device objects, not re-uploads
+    new_packed = res.store.plan(CFG).packed_lanes()
+    identical = sum(1 for a in new_packed if any(a is b for b in packed0))
+    assert identical == s["packed_lanes_reused"]
+    # results still bit-identical to a cold rebuild of the post graph
+    post = apply_delta_to_graph(g, delta)
+    cold = GraphStore(post, geom=GEOM, perm=store.perm)
+    assert np.array_equal(_run(res.store, "sssp", {"root": 0}, "ref"),
+                          _run(cold, "sssp", {"root": 0}, "ref"))
+
+
+def test_base_store_is_an_untouched_snapshot(wgraph):
+    store = GraphStore(wgraph, geom=GEOM)
+    store.plan(CFG)
+    before = {k: v.copy() for k, v in store.edges.items()}
+    infos_before = [dataclasses.replace(i) for i in store.infos]
+    delta = random_delta(wgraph, churn=0.05, seed=19)
+    res = apply_delta(store, delta)
+    assert res.store is not store
+    for k in before:
+        assert np.array_equal(store.edges[k], before[k])
+    assert store.infos == infos_before
+    assert store.fingerprint() == wgraph.fingerprint()
+    assert store.has_plan(CFG), "base keeps its cached plans"
+
+
+def test_clear_plans_reports_freed_bytes(wgraph):
+    store = GraphStore(wgraph, geom=GEOM)
+    store.plan(CFG).packed_lanes()
+    assert store.memory_footprint()["plan_bytes"] > 0
+    out = store.clear_plans()
+    assert out["plans"] == 1
+    assert out["freed_bytes"] > 0
+    assert store.memory_footprint()["plan_bytes"] == 0
+    again = store.clear_plans()
+    assert again == {"plans": 0, "freed_bytes": 0}
+
+
+def test_store_accepts_explicit_perm(wgraph):
+    a = GraphStore(wgraph, geom=GEOM)
+    b = GraphStore(wgraph, geom=GEOM, perm=a.perm)
+    for k in ("src", "dst", "weights"):
+        assert np.array_equal(a.edges[k], b.edges[k])
+    assert a.infos == b.infos
+    with pytest.raises(ValueError):
+        GraphStore(wgraph, geom=GEOM, perm=np.arange(3, dtype=np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Serving integration: GraphService.update
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def svc():
+    geom = Geometry(U=256, W=128, T=128, E_BLK=128, big_batch=2)
+    with api.GraphService(workers=2, default_geom=geom,
+                          default_path="ref") as s:
+        yield s
+
+
+def test_service_update_rekeys_and_serves_post_delta(svc, wgraph):
+    fp = svc.register(wgraph)
+    svc.run(fingerprint=fp, app="pagerank", n_lanes=4, max_iters=3,
+            timeout=120)
+    delta = random_delta(wgraph, churn=0.01, seed=5, hot_frac=0.05)
+    res = svc.update(fp, delta)
+    assert res.mode == "incremental"
+    assert res.retired == "now"
+    assert res.stats["plans_rebuilt"] >= 1
+    # the new fingerprint is served warm from the spliced store
+    r, m = svc.run(fingerprint=res.fingerprint, app="pagerank", n_lanes=4,
+                   max_iters=3, timeout=120)
+    assert m["iterations"] == 3
+    post = apply_delta_to_graph(wgraph, delta)
+    cold = GraphStore(post, geom=svc.default_geom,
+                      perm=np.asarray(
+                          svc.cache.get(store_key(res.fingerprint,
+                                                  svc.default_geom,
+                                                  True)).perm))
+    assert np.array_equal(
+        r, _run(cold, "pagerank", {}, "ref", max_iters=3))
+    # old fingerprint was deregistered and its store retired
+    with pytest.raises(KeyError):
+        svc.submit(fingerprint=fp, app="pagerank")
+    snap = svc.metrics.snapshot()
+    assert snap["updates"] == 1
+    assert snap["stores_retired"] == 1
+    assert snap["packed_lanes_reused"] == res.stats["packed_lanes_reused"]
+    assert snap["p50_update_ms"] is not None
+
+
+def test_service_update_keep_base(svc, wgraph):
+    fp = svc.register(wgraph)
+    delta = random_delta(wgraph, churn=0.01, seed=7)
+    res = svc.update(fp, delta, keep_base=True)
+    # both snapshots remain servable: the base rebuilds from the
+    # registry, the new one is cached (and rebuildable from the chain)
+    h_old = svc.submit(fingerprint=fp, app="bfs", app_kwargs={"root": 0},
+                       n_lanes=4, max_iters=4)
+    h_new = svc.submit(fingerprint=res.fingerprint, app="bfs",
+                       app_kwargs={"root": 0}, n_lanes=4, max_iters=4)
+    r_old, _ = h_old.result(timeout=120)
+    r_new, _ = h_new.result(timeout=120)
+    # BFS is min-gather: exact regardless of vertex ordering, so each
+    # snapshot must match a direct build of its own graph
+    direct_old, _ = api.compile(wgraph, "bfs", geom=svc.default_geom,
+                                n_lanes=4, path="ref").run(max_iters=4)
+    post = apply_delta_to_graph(wgraph, delta)
+    direct_new, _ = api.compile(post, "bfs", geom=svc.default_geom,
+                                n_lanes=4, path="ref").run(max_iters=4)
+    assert np.array_equal(r_old, direct_old)
+    assert np.array_equal(r_new, direct_new)
+
+
+def test_service_update_deferred_then_rebuilds(svc, wgraph):
+    fp = svc.register(wgraph, prepare=False)   # nothing cached
+    delta = random_delta(wgraph, churn=0.02, seed=9)
+    res = svc.update(fp, delta)
+    assert res.mode == "deferred"
+    assert res.stats is None
+    # cold submit replays the chain
+    r, _ = svc.run(fingerprint=res.fingerprint, app="wcc", n_lanes=4,
+                   max_iters=6, timeout=120)
+    post = apply_delta_to_graph(wgraph, delta)
+    direct, _ = api.compile(post, "wcc", geom=svc.default_geom, n_lanes=4,
+                            path="ref").run(max_iters=6)
+    assert np.array_equal(r, direct)
+    assert svc.metrics.snapshot()["updates_deferred"] == 1
+
+
+def test_service_update_anchors_unregistered_lineage(svc, wgraph):
+    """update() on a base that was only ever SUBMITTED (never
+    registered) must still leave the chained fingerprint rebuildable:
+    the lineage anchors on the store's own source graph."""
+    h = svc.submit(wgraph, "pagerank", n_lanes=4, max_iters=2)
+    h.result(timeout=300)
+    fp = wgraph.fingerprint()
+    delta = random_delta(wgraph, churn=0.01, seed=31)
+    res = svc.update(fp, delta)
+    assert res.mode == "incremental"
+    # evict the derived store, then resubmit by the chained fingerprint
+    new_key = store_key(res.fingerprint, svc.default_geom, True)
+    assert svc.cache.evict(new_key)
+    r, _ = svc.run(fingerprint=res.fingerprint, app="bfs",
+                   app_kwargs={"root": 0}, n_lanes=4, max_iters=4,
+                   timeout=300)
+    post = apply_delta_to_graph(wgraph, delta)
+    direct, _ = api.compile(post, "bfs", geom=svc.default_geom,
+                            n_lanes=4, path="ref").run(max_iters=4)
+    assert np.array_equal(r, direct)
+
+
+def test_service_deferred_update_validates_now(svc, wgraph):
+    """An invalid delta against an UNCACHED (registry-only) snapshot
+    must fail the update() call itself — recording it unvalidated would
+    poison the lineage for every later cold submit."""
+    fp = svc.register(wgraph, prepare=False)
+    keys = set(zip(wgraph.src.tolist(), wgraph.dst.tolist()))
+    s, d = next((a, b) for a in range(5) for b in range(2040, 2048)
+                if (a, b) not in keys and a != b)
+    bad = make_delta(fp, remove=([s], [d]))      # edge doesn't exist
+    with pytest.raises(ValueError, match="not in the base graph"):
+        svc.update(fp, bad)
+    assert svc.metrics.snapshot()["update_failures"] == 1
+    # the base snapshot is untouched and still serveable
+    r, _ = svc.run(fingerprint=fp, app="bfs", app_kwargs={"root": 0},
+                   n_lanes=4, max_iters=4, timeout=300)
+    direct, _ = api.compile(wgraph, "bfs", geom=svc.default_geom,
+                            n_lanes=4, path="ref").run(max_iters=4)
+    assert np.array_equal(r, direct)
+
+
+def test_service_update_validation(svc, wgraph):
+    fp = svc.register(wgraph)
+    with pytest.raises(ValueError):
+        svc.update("00" * 16, random_delta(wgraph, seed=1))
+    unknown = rmat(8, 4, seed=99, weighted=True)
+    with pytest.raises(KeyError):
+        svc.update(unknown.fingerprint(),
+                   random_delta(unknown, seed=1))
+    assert svc.metrics.snapshot()["update_failures"] == 1
+
+
+def test_service_update_defers_retire_while_jobs_queued(wgraph):
+    """A request QUEUED against the old fingerprint (not yet picked up
+    by a worker, so not lease-pinned) must still finish on the old
+    snapshot: update() defers retirement until the per-key job count
+    drains. Single worker + a slow job in front forces the queue wait."""
+    geom = Geometry(U=256, W=128, T=128, E_BLK=128, big_batch=2)
+    other = rmat(10, 8, seed=77, weighted=True)
+    with api.GraphService(workers=1, default_geom=geom,
+                          default_path="ref") as svc:
+        fp = svc.register(wgraph)
+        skey = store_key(fp, geom, True)
+        # head-of-line job keeps the single worker busy...
+        slow = svc.submit(other, "pagerank", n_lanes=4, max_iters=16)
+        # ...so this old-fp request sits in the queue, unleased
+        queued = svc.submit(fingerprint=fp, app="bfs",
+                            app_kwargs={"root": 0}, n_lanes=4, max_iters=4)
+        delta = random_delta(wgraph, churn=0.01, seed=21)
+        res = svc.update(fp, delta)
+        assert res.retired == "deferred"
+        assert skey in svc.cache, "old snapshot must outlive queued work"
+        r, _ = queued.result(timeout=300)      # served, not KeyError'd
+        slow.result(timeout=300)
+        direct, _ = api.compile(wgraph, "bfs", geom=geom, n_lanes=4,
+                                path="ref").run(max_iters=4)
+        assert np.array_equal(r, direct), "queued job saw the OLD snapshot"
+        # drained -> the deferred retirement actually fired
+        deadline = 50
+        import time as _t
+        while skey in svc.cache and deadline:
+            _t.sleep(0.05)
+            deadline -= 1
+        assert skey not in svc.cache, "retire must fire once drained"
+        # and the new snapshot serves
+        r2, _ = svc.run(fingerprint=res.fingerprint, app="bfs",
+                        app_kwargs={"root": 0}, n_lanes=4, max_iters=4,
+                        timeout=300)
+        post = apply_delta_to_graph(wgraph, delta)
+        direct2, _ = api.compile(post, "bfs", geom=geom, n_lanes=4,
+                                 path="ref").run(max_iters=4)
+        assert np.array_equal(r2, direct2)
+
+
+def test_service_update_defers_retire_while_leased(svc, wgraph):
+    fp = svc.register(wgraph)
+    skey = store_key(fp, svc.default_geom, True)
+    delta = random_delta(wgraph, churn=0.01, seed=3)
+    with svc.cache.lease(skey) as (store, _):   # simulate in-flight work
+        res = svc.update(fp, delta)
+        assert res.retired == "deferred"
+        assert skey in svc.cache, "old snapshot survives while leased"
+        # the leased store is the UNTOUCHED base snapshot
+        assert store.fingerprint() == fp
+    assert skey not in svc.cache, "drained lease evicts the retired entry"
+    assert store_key(res.fingerprint, svc.default_geom, True) in svc.cache
