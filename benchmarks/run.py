@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV lines (see benchmarks/common.emit).
   —        bench_serving        GraphService throughput/latency/caching
   —        bench_fused          fused vs per-entry execution (+ JSON)
   —        bench_streaming      delta apply vs full rebuild (+ JSON)
+  —        bench_sharding       sharded vs single-device fused (+ JSON)
 """
 from __future__ import annotations
 
@@ -22,7 +23,7 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: pipelines,heterogeneity,scalability,"
                          "preprocessing,amortization,sota,roofline,serving,"
-                         "fused,streaming")
+                         "fused,streaming,sharding")
     ap.add_argument("--quick", action="store_true",
                     help="smaller graph set (CI-speed)")
     ap.add_argument("--smoke", action="store_true",
@@ -35,7 +36,8 @@ def main() -> None:
 
     from . import (bench_fused, bench_heterogeneity, bench_pipelines,
                    bench_preprocessing, bench_roofline, bench_scalability,
-                   bench_serving, bench_sota, bench_streaming)
+                   bench_serving, bench_sharding, bench_sota,
+                   bench_streaming)
 
     suites = [
         ("pipelines", lambda: bench_pipelines.run(
@@ -74,6 +76,11 @@ def main() -> None:
         # the gate is a median ratio and 3 samples is too noisy to gate.
         ("streaming", lambda: bench_streaming.run(smoke=args.smoke,
                                                   repeats=5)),
+        # forced 8-device CPU subprocess (device count is fixed at jax
+        # import, so the parent process can't host it); gates parity,
+        # per-device dispatch counts, the single cross-device merge,
+        # and streaming shard reuse at every tier
+        ("sharding", lambda: bench_sharding.run(smoke=args.smoke)),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

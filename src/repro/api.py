@@ -33,6 +33,11 @@ see repro/serve_graph/)::
     with api.GraphService(byte_budget=512 << 20, workers=2) as svc:
         handles = [svc.submit(g, name) for name in api.BUILTIN_APPS]
         results = [h.result(timeout=120) for h in handles]
+
+Streaming updates flow through :class:`GraphDelta` / :func:`apply_delta`
+(see repro/streaming/); multi-device execution through
+``compile(shard=...)`` / ``GraphStore.shard()`` (see repro/sharding/).
+docs/ARCHITECTURE.md maps the whole system.
 """
 from __future__ import annotations
 
@@ -49,27 +54,34 @@ from .core.types import Geometry, SchedulePlan
 from .graphs.formats import Graph, fingerprint as graph_fingerprint
 from .serve_graph import (GraphService, GraphStoreCache, RequestHandle,
                           ServiceMetrics, UpdateResult)
+from .sharding import (LanePlacement, ShardedExecutor, ShardedLanes,
+                       place_lanes)
 from .streaming import (GraphDelta, apply_delta, apply_delta_to_graph,
                         chain_fingerprint, make_delta, random_delta)
 
 __all__ = [
     "BUILTIN_APPS", "CompiledApp", "Executor", "GASApp", "Geometry",
     "GraphDelta", "GraphService", "GraphStore", "GraphStoreCache", "HW",
-    "PlanBundle", "PlanConfig", "Planner", "RequestHandle", "SchedulePlan",
-    "ServiceMetrics", "TPU_V5E", "TPU_V5E_SCALED", "UpdateResult",
+    "LanePlacement", "PlanBundle", "PlanConfig", "Planner",
+    "RequestHandle", "SchedulePlan", "ServiceMetrics", "ShardedExecutor",
+    "ShardedLanes", "TPU_V5E", "TPU_V5E_SCALED", "UpdateResult",
     "apply_delta", "apply_delta_to_graph", "chain_fingerprint", "compile",
     "graph_fingerprint", "make_bfs", "make_closeness", "make_delta",
-    "make_pagerank", "make_sssp", "make_wcc", "random_delta",
+    "make_pagerank", "make_sssp", "make_wcc", "place_lanes",
+    "random_delta",
 ]
 
 
 @dataclasses.dataclass
 class CompiledApp:
     """The result of :func:`compile`: one app bound to a (possibly
-    shared) GraphStore and a cached plan, ready to run."""
+    shared) GraphStore and a cached plan, ready to run. ``executor``
+    is an :class:`Executor` or — under ``compile(shard=...)`` — a
+    :class:`ShardedExecutor` (same run/time_iteration/stats surface;
+    ``time_lanes`` exists only on the single-device form)."""
 
     store: GraphStore
-    executor: Executor
+    executor: Union[Executor, ShardedExecutor]
 
     @property
     def app(self) -> GASApp:
@@ -107,10 +119,11 @@ def compile(
     path: Optional[str] = None,
     use_dbg: Optional[bool] = None,
     fuse_lanes: bool = True,
+    shard=None,
     **cfg,
 ) -> CompiledApp:
     """Push-button entry point: prepare (or reuse) a GraphStore, plan,
-    and materialize an Executor for one app.
+    and materialize an executor for one app.
 
     ``app`` may be a :class:`GASApp` or a builtin name ("pagerank",
     "bfs", "sssp", "wcc", "closeness"). Extra keyword arguments become
@@ -119,7 +132,14 @@ def compile(
     preprocessing across apps; ``graph`` may then be None.
     ``fuse_lanes=False`` disables the packed-lane execution path (one
     kernel launch per plan entry instead of one per lane; bit-identical
-    results — see README §Performance).
+    results — see README §Performance). ``shard`` switches to
+    multi-device execution with per-device lane ownership (``True`` =
+    every local device, int = first n, or an explicit device sequence;
+    bit-identical to the single-device fused path — see README
+    §Sharding); the returned :class:`CompiledApp` then wraps a
+    :class:`ShardedExecutor`.
+
+    Returns a :class:`CompiledApp` (run / time_iteration / stats).
     """
     if isinstance(app, str):
         if app not in BUILTIN_APPS:
@@ -140,4 +160,5 @@ def compile(
         store.validate_compatible(graph=graph, geom=geom, use_dbg=use_dbg)
     return CompiledApp(store=store,
                        executor=store.executor(app, config, path=path,
-                                               fuse_lanes=fuse_lanes))
+                                               fuse_lanes=fuse_lanes,
+                                               shard=shard))

@@ -1,17 +1,28 @@
-"""Multi-device execution of the heterogeneous engine via shard_map.
+"""Chunk-granular SPMD execution over a GraphStore plan via shard_map.
 
-SPMD mapping of the paper's pipeline clusters: work is re-chunked into
-fixed-shape units (tile-snapped, so chunks never share a destination
-tile), chunks are LPT-balanced across devices using the perf model's
-per-chunk estimates (the intra-cluster equal-time cutting at chunk
-granularity), and each device scans its queue — Little chunks and Big
-chunks — accumulating a device-local property delta. Cross-device merge
-uses psum/pmin/pmax (tiles are device-disjoint, so 'or' merges via psum).
+One of the repo's two multi-device paths, built directly on the layered
+GraphStore → Planner → Executor API: ``DistributedEngine(store, app)``
+plans on the store (cached per :class:`~.planner.PlanConfig`), re-chunks
+the plan's blocked works into fixed-shape units (tile-snapped, so chunks
+never share a destination tile), LPT-balances chunks across the mesh
+with a uniform per-block cost model, and runs ONE ``shard_map`` program
+in which every device scans its stacked chunk queue — Little chunks and
+Big chunks — accumulating a device-local property delta. The
+cross-device merge is a collective psum/pmin/pmax (tiles are
+device-disjoint, so 'or' merges exactly via psum).
+
+The other path is ``repro.sharding`` (lane-granular: the packed lane
+payload is the shard unit, per-device jit'd fns instead of one SPMD
+program, native payload shapes, streaming payload-residency reuse).
+This module trades that flexibility for a single fixed-shape SPMD
+program — padding chunks to a uniform (depth, B, E_BLK) stack — which
+is the shape collective-offload compilers want; it also serves as the
+shard_map reference the lane-granular path is tested against.
 
 At real scale the vertex property array would be window-sharded with a
-halo exchange; on the 512-chip production mesh the graph engine is a
-per-pod-replica service, so vprops stays replicated here (it is the small
-array; edges dominate and are fully sharded).
+halo exchange; on a multi-pod mesh the graph engine runs as a
+per-pod-replica service, so vprops stays replicated here (it is the
+small array; edges dominate and are fully sharded).
 """
 from __future__ import annotations
 
@@ -25,7 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels import ops
 from ..kernels import ref as ref_mod
-from .engine import HeterogeneousEngine
+from .executor import init_props
 from .gas import GATHER_IDENTITY
 from .types import BlockedEdges, Geometry
 
@@ -108,13 +119,35 @@ def _stack_chunks(chunks, B, geom: Geometry, umax: int, kind: str):
 
 
 class DistributedEngine:
-    """Runs a prepared HeterogeneousEngine's plan across mesh devices."""
+    """Chunk-granular SPMD runner for one app on a GraphStore.
 
-    def __init__(self, base: HeterogeneousEngine, mesh: Optional[Mesh] = None,
+    Parameters
+    ----------
+    store:  a prepared :class:`~.store.GraphStore`.
+    app:    the :class:`~.gas.GASApp` to execute.
+    config: :class:`~.planner.PlanConfig` for the (cached) plan whose
+            blocked works are chunked; defaults to ``PlanConfig()``.
+    mesh:   jax mesh to run on (defaults to a 1-D mesh over every
+            local device).
+    blocks_per_chunk: chunk size in E_BLK blocks before tile-snapping
+            (the fixed shape every chunk is padded to).
+    axis:   mesh axis name the chunk queues are sharded over.
+
+    ``run`` matches ``Executor.run``'s contract: returns props in
+    ORIGINAL vertex ids plus an iteration count, numerically matching
+    the single-device paths up to reduction order (the collective merge
+    is exact for min/max/or; 'sum' apps may differ by 1 ULP).
+    """
+
+    def __init__(self, store, app, config=None, mesh: Optional[Mesh] = None,
                  blocks_per_chunk: int = 32, axis: str = "pipe"):
-        self.base = base
+        from .planner import PlanConfig
+        self.store = store
+        self.app = app
+        self.bundle = store.plan(config or PlanConfig())
         self.axis = axis
-        self.geom = base.geom
+        self.geom = store.geom
+        self.V_pad = store.V_pad
         if mesh is None:
             devs = np.array(jax.devices())
             mesh = Mesh(devs, (axis,))
@@ -122,12 +155,13 @@ class DistributedEngine:
         self.n_dev = mesh.devices.size
         B = blocks_per_chunk
 
-        little = [c for w in base.little_works.values()
+        little = [c for w in self.bundle.little_works.values()
                   for c in _chunk_work(w, B)]
-        big = [c for w in base.big_works for c in _chunk_work(w, B)]
+        big = [c for w in self.bundle.big_works for c in _chunk_work(w, B)]
         self.Bl = max([hi - lo for _, lo, hi in little], default=1)
         self.Bb = max([hi - lo for _, lo, hi in big], default=1)
-        umax = max([w.unique_src.shape[0] for w in base.big_works], default=0)
+        umax = max([w.unique_src.shape[0]
+                    for w in self.bundle.big_works], default=0)
         umax = max(umax, self.geom.W)
 
         # LPT-balance chunks over devices (est ~ #blocks; uniform-cost model)
@@ -165,10 +199,10 @@ class DistributedEngine:
         self._iter_fn = None
 
     def _build(self):
-        app, geom = self.base.app, self.base.geom
+        app, geom = self.app, self.geom
         ident = GATHER_IDENTITY[app.gather]
         dt = jnp.int32 if app.gather == "or" else jnp.float32
-        V_pad, T, axis = self.base.V_pad, geom.T, self.axis
+        V_pad, T, axis = self.V_pad, geom.T, self.axis
         n_rows = V_pad // T
 
         def run_chunk(vwin, c, n_tiles):
@@ -218,24 +252,26 @@ class DistributedEngine:
         return jax.jit(iteration)
 
     def run(self, max_iters: Optional[int] = None):
+        """Run to convergence; returns ``(props, meta)`` with props in
+        ORIGINAL vertex ids (the chunk queues are uploaded sharded over
+        the mesh axis once, on first call)."""
         if self._iter_fn is None:
             self._iter_fn = self._build()
-        base = self.base
-        vprops = base.init_props()
+        vprops = init_props(self.store, self.app)
         ls = (None if self.little_stack is None else
               jax.device_put(self.little_stack,
                              NamedSharding(self.mesh, P(self.axis))))
         bs = (None if self.big_stack is None else
               jax.device_put(self.big_stack,
                              NamedSharding(self.mesh, P(self.axis))))
-        iters = max_iters or base.app.max_iters
+        iters = max_iters or self.app.max_iters
         it_done = 0
         for it in range(iters):
-            new = self._iter_fn(vprops, base.aux, it, ls, bs)
+            new = self._iter_fn(vprops, self.store.aux, it, ls, bs)
             new.block_until_ready()
             it_done = it + 1
-            if base.app.converged(vprops, new, it):
+            if self.app.converged(vprops, new, it):
                 vprops = new
                 break
             vprops = new
-        return np.asarray(vprops)[base.perm], {"iterations": it_done}
+        return np.asarray(vprops)[self.store.perm], {"iterations": it_done}

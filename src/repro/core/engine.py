@@ -14,11 +14,12 @@ New code should use ``repro.api`` directly::
     props, meta = store.plan_and_run(app)           # plan cached per config
 
 The shim keeps every legacy attribute (``infos``, ``edges``, ``plan``,
-``little_works`` …) so existing tests, benchmarks, and
-``DistributedEngine`` keep working, and accepts the legacy
-``plan_mode: str | tuple`` union (converted via
+``little_works`` …) so existing tests and benchmarks keep working, and
+accepts the legacy ``plan_mode: str | tuple`` union (converted via
 ``PlanConfig.from_legacy``). Pass ``store=`` to share one GraphStore
 across several engines (the plan cache then amortizes preprocessing).
+``DistributedEngine`` no longer consumes the shim — it takes a
+``GraphStore`` directly (see core/distributed.py).
 """
 from __future__ import annotations
 

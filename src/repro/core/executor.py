@@ -71,6 +71,31 @@ def _count_jaxpr_eqns(jaxpr) -> int:
 
 
 class Executor:
+    """Per-(plan, app) single-device executor.
+
+    Parameters
+    ----------
+    store:   the :class:`~.store.GraphStore` the plan was built on
+             (supplies aux, V_pad, perm; shared across executors).
+    bundle:  the (cached) :class:`~.planner.PlanBundle` to execute;
+             its materialized payloads are memoized on the bundle, so
+             every app on the same plan shares device memory.
+    app:     the :class:`~.gas.GASApp` whose scatter/gather/apply UDFs
+             bind at run time.
+    path:    kernel path — "pallas" (compiled on TPU, interpret
+             elsewhere) or "ref" (pure-jnp oracle; the CPU default).
+    fuse_lanes: True (default) runs each lane as ONE packed kernel
+             launch; False launches per plan entry. Both paths are
+             bit-identical (they share the single-merge program
+             structure) — see the module docstring.
+
+    Invariants: ``run`` returns properties in ORIGINAL vertex ids;
+    one iteration dispatches exactly one merge (``dispatch_stats``);
+    the multi-device counterpart is
+    :class:`repro.sharding.executor.ShardedExecutor` (same surface,
+    minus ``time_lanes``/``trace_stats``).
+    """
+
     def __init__(self, store, bundle: PlanBundle, app: GASApp,
                  path: Optional[str] = None, fuse_lanes: bool = True):
         self.store = store

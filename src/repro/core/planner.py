@@ -130,6 +130,15 @@ class PlanBundle:
         default=0, repr=False, compare=False)
     packed_bytes_reused: int = dataclasses.field(
         default=0, repr=False, compare=False)
+    # sharded (multi-device) materializations: device tuple ->
+    # sharding.ShardedLanes (lane payloads resident on owner devices)
+    _sharded: Optional[dict] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # streaming carry-over for the sharded form: (devices, keep, seed)
+    # — keep: lane idx -> owner device idx to pin, seed: lane idx ->
+    # resident payload list (see repro.streaming.apply_delta)
+    _shard_seed: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def dense(self) -> List[PartitionInfo]:
@@ -178,6 +187,35 @@ class PlanBundle:
                 self._packed_seed = None   # release pre-delta bundle refs
             return self._packed_lanes
 
+    def sharded_lanes(self, devices):
+        """Multi-device lane payloads: each lane packed (as in
+        :meth:`packed_lanes`) and uploaded to the OWNER device chosen by
+        the LPT placement (see ``repro.sharding``). Memoized per device
+        tuple, so every app executing this plan on the same devices
+        shares one resident copy. Bundles rebuilt after a streaming
+        delta may carry a ``_shard_seed`` pinning clean lanes to their
+        old owners and splicing their resident payloads in without
+        re-transfer (``ShardedLanes.moved``/``reused`` account for it).
+        """
+        from ..sharding.executor import materialize_sharded
+        devices = tuple(devices)
+        with self._mat_lock:
+            if self._sharded is None:
+                self._sharded = {}
+            sharded = self._sharded.get(devices)
+            if sharded is None:
+                keep = seed = None
+                if self._shard_seed is not None:
+                    seed_devs, keep, seed = self._shard_seed
+                    if tuple(seed_devs) != devices:
+                        keep = seed = None   # seed targets other devices
+                    else:
+                        self._shard_seed = None  # release pre-delta refs
+                sharded = materialize_sharded(self, devices,
+                                              keep=keep, seed=seed)
+                self._sharded[devices] = sharded
+            return sharded
+
     def device_bytes(self) -> dict:
         """Device bytes pinned by whichever payload forms this bundle
         has materialized so far (feeds the store's plan-cache byte
@@ -189,7 +227,7 @@ class PlanBundle:
         materialization. Snapshot reads of the memoized lists are safe —
         they flip once from None to an immutable value."""
         from ..kernels import ops
-        out = {"entry_bytes": 0, "packed_bytes": 0}
+        out = {"entry_bytes": 0, "packed_bytes": 0, "sharded_bytes": 0}
         entries, packed = self._lane_entries, self._packed_lanes
         if entries is not None:
             out["entry_bytes"] = sum(
@@ -197,7 +235,12 @@ class PlanBundle:
         if packed is not None:
             out["packed_bytes"] = sum(
                 ops.payload_nbytes(p) for lane in packed for p in lane)
-        out["total_bytes"] = out["entry_bytes"] + out["packed_bytes"]
+        sharded = self._sharded
+        if sharded:
+            out["sharded_bytes"] = sum(
+                s.nbytes() for s in list(sharded.values()))
+        out["total_bytes"] = (out["entry_bytes"] + out["packed_bytes"]
+                              + out["sharded_bytes"])
         return out
 
 

@@ -9,11 +9,12 @@ batch's Big layout) pays for it, every later plan reuses it — so running
 all five builtin apps against one store incurs the preprocessing cost
 once. Plans themselves are cached per :class:`~.planner.PlanConfig`.
 
-Layering (see repro/api.py):
+Layering (see repro/api.py and docs/ARCHITECTURE.md):
 
     GraphStore  — per (graph, geometry); owns edges + blockings
       Planner   — per PlanConfig; classification + lane schedule (cheap)
         Executor — per (plan, app); device arrays + jit'd iteration
+        ShardedExecutor — per (plan, app, devices); lane-sharded
 """
 from __future__ import annotations
 
@@ -273,11 +274,38 @@ class GraphStore:
             self._plan_cache.clear()
         return {"plans": n, "freed_bytes": int(freed)}
 
+    def shard(self, config=None, devices=None):
+        """Place and upload the (cached) plan's lanes across devices.
+
+        The shard unit is the packed lane payload: lanes are
+        LPT-assigned to devices from the perf model's per-lane
+        estimates (Little and Big interleaved per device) and each
+        lane's packed arrays are ``device_put`` to the owner. Returns
+        the memoized :class:`~repro.sharding.executor.ShardedLanes`
+        (placement + resident payloads + move/reuse accounting);
+        ``devices`` is anything
+        :func:`~repro.sharding.executor.resolve_devices` accepts
+        (None = all local devices, int n = first n, or an explicit
+        device sequence)."""
+        from ..sharding.executor import resolve_devices
+        return self.plan(config).sharded_lanes(resolve_devices(devices))
+
     def executor(self, app, config=None, path: Optional[str] = None,
-                 fuse_lanes: bool = True):
-        """Materialize an :class:`~.executor.Executor` for one app on the
-        (cached) plan for ``config``. ``fuse_lanes=False`` falls back to
-        one kernel launch per materialized plan entry (debug/AB path)."""
+                 fuse_lanes: bool = True, shard=None):
+        """Materialize an executor for one app on the (cached) plan for
+        ``config``.
+
+        ``fuse_lanes=False`` falls back to one kernel launch per
+        materialized plan entry (debug/AB path). ``shard`` switches to
+        the multi-device :class:`~repro.sharding.executor.ShardedExecutor`
+        (per-device lane ownership, one cross-device merge per
+        iteration): ``True`` shards over every local device, an int
+        over the first n, a device sequence over exactly those;
+        ``None``/``False`` keeps the single-device Executor."""
+        if shard is not None and shard is not False:
+            from ..sharding.executor import ShardedExecutor
+            return ShardedExecutor(self, self.plan(config), app,
+                                   devices=shard, path=path)
         from .executor import Executor
         return Executor(self, self.plan(config), app, path=path,
                         fuse_lanes=fuse_lanes)
@@ -326,6 +354,35 @@ class GraphStore:
                                + plan_bytes + aux_bytes),
         }
 
+    def placement_stats(self) -> dict:
+        """Per-device placement section: lanes and payload bytes per
+        device plus the worst imbalance ratio, aggregated over every
+        cached plan's sharded materializations (empty-shaped —
+        ``devices == 0`` — when nothing is sharded). Benchmarks and
+        serving metrics read this instead of recomputing placement."""
+        with self._plan_lock:
+            bundles = list(self._plan_cache.values())
+        # aggregate each form's own stats() — one definition of
+        # "occupied lane" / per-device bytes, owned by ShardedLanes
+        forms = [s.stats() for b in bundles
+                 for s in list((getattr(b, "_sharded", None) or {})
+                               .values())]
+        n_dev = max((s["n_devices"] for s in forms), default=0)
+        lanes = [0] * n_dev
+        nbytes = [0] * n_dev
+        for s in forms:
+            for d in range(s["n_devices"]):
+                lanes[d] += s["lanes_per_device"][d]
+                nbytes[d] += s["bytes_per_device"][d]
+        return {
+            "devices": n_dev,
+            "sharded_plans": len(forms),
+            "lanes_per_device": lanes,
+            "bytes_per_device": nbytes,
+            "imbalance": max((s["imbalance"] for s in forms),
+                             default=1.0),
+        }
+
     def stats(self) -> dict:
         return {
             "V": self.graph.num_vertices,
@@ -338,6 +395,7 @@ class GraphStore:
             "cached_big_works": len(self._big_cache),
             "cached_plans": len(self._plan_cache),
             "plan_evictions": self.plan_evictions,
+            "placement": self.placement_stats(),
             **self.memory_footprint(),
         }
 

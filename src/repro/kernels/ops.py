@@ -95,12 +95,16 @@ def _entry_np(blocked: BlockedEdges, lo: int, hi: int) -> Optional[dict]:
     }
 
 
-def _upload_payload(p: dict) -> dict:
-    """Move a host payload's array fields to the device (jnp)."""
+def _upload_payload(p: dict, device=None) -> dict:
+    """Move a host payload's array fields to the device (jnp).
+    ``device=None`` targets the default device; the sharded path passes
+    each lane's OWNER device so payloads land committed where they will
+    execute (committed inputs pin the jit'd lane fn to that device)."""
     out = dict(p)
     for k in _DEVICE_KEYS:
         if out.get(k) is not None:
-            out[k] = jnp.asarray(out[k])
+            out[k] = (jnp.asarray(out[k]) if device is None
+                      else jax.device_put(np.asarray(out[k]), device))
     return out
 
 
@@ -241,11 +245,19 @@ def pack_lanes(plan, little_works, big_works,
     host = [None if i in reuse
             else _pack_lane_np(lane, little_works, big_works)
             for i, lane in enumerate(plan.lanes)]
-    # merge_all's single scatter-set needs tile disjointness ACROSS
-    # payloads too (duplicate scatter indices have an unspecified
-    # winner in XLA); _validate_packed only covers within-payload.
-    # Checked on host copies (reused payloads' tile_idx pulled back —
-    # tiny per-tile arrays), before anything new is uploaded.
+    _check_lanes_disjoint(host, reuse)
+    return [reuse[i] if lane is None else [_upload_payload(p) for p in lane]
+            for i, lane in enumerate(host)]
+
+
+def _check_lanes_disjoint(host, reuse) -> None:
+    """Global tile disjointness ACROSS lanes: merge_all's single
+    scatter-set (and the sharded path's single psum-style merge) rely on
+    every destination tile being written by exactly one payload —
+    duplicate scatter indices have an unspecified winner in XLA.
+    ``_validate_packed`` only covers within-payload; this checks across.
+    Runs on host copies (reused payloads' tile_idx pulled back — tiny
+    per-tile arrays), before anything new is uploaded."""
     idx = []
     for i, lane in enumerate(host):
         if lane is None:
@@ -255,8 +267,40 @@ def pack_lanes(plan, little_works, big_works,
     all_idx = np.concatenate(idx) if idx else np.zeros(0, np.int32)
     assert np.unique(all_idx).shape[0] == all_idx.shape[0], \
         "plan assigns the same destination tile to multiple lanes"
-    return [reuse[i] if lane is None else [_upload_payload(p) for p in lane]
-            for i, lane in enumerate(host)]
+
+
+def pack_lanes_sharded(plan, little_works, big_works, owners, devices,
+                       reuse: Optional[dict] = None):
+    """Sharded counterpart of :func:`pack_lanes`: pack each lane
+    host-side and upload its payloads to the OWNER device
+    (``devices[owners[i]]`` for lane ``i``) instead of the default one.
+
+    ``reuse`` maps lane index -> payload list already RESIDENT on the
+    right device (streaming carry-over of clean, placement-stable
+    lanes); reused lanes skip packing and the transfer entirely but
+    still participate in the global disjointness check.
+
+    Returns ``(lanes, moved, bytes_moved)`` where ``moved`` counts the
+    non-empty lanes actually uploaded this call and ``bytes_moved``
+    their device bytes — the ``shards_moved`` accounting streaming
+    updates surface.
+    """
+    reuse = reuse or {}
+    host = [None if i in reuse
+            else _pack_lane_np(lane, little_works, big_works)
+            for i, lane in enumerate(plan.lanes)]
+    _check_lanes_disjoint(host, reuse)
+    lanes, moved, bytes_moved = [], 0, 0
+    for i, lane in enumerate(host):
+        if lane is None:
+            lanes.append(reuse[i])
+            continue
+        up = [_upload_payload(p, device=devices[owners[i]]) for p in lane]
+        if up:
+            moved += 1
+            bytes_moved += sum(payload_nbytes(p) for p in up)
+        lanes.append(up)
+    return lanes, moved, bytes_moved
 
 
 def payload_nbytes(payload: dict) -> int:

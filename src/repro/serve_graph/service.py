@@ -164,13 +164,14 @@ class _Job:
     """One unit of execution: a coalescing group of identical requests."""
 
     __slots__ = ("key", "skey", "graph", "app_name", "make_app", "config",
-                 "use_dbg", "geom", "max_iters", "path", "handles",
+                 "use_dbg", "geom", "max_iters", "path", "shard", "handles",
                  "t_submit")
 
     def __init__(self, key, skey: StoreKey, graph: Optional[Graph],
                  app_name: str, make_app, config: PlanConfig,
                  geom: Geometry, use_dbg: bool,
-                 max_iters: Optional[int], path: Optional[str]):
+                 max_iters: Optional[int], path: Optional[str],
+                 shard=None):
         self.key = key
         self.skey = skey
         self.graph = graph
@@ -181,6 +182,7 @@ class _Job:
         self.use_dbg = use_dbg
         self.max_iters = max_iters
         self.path = path
+        self.shard = shard
         # guarded by the service lock: attachment of coalesced twins and
         # the finishing snapshot must be mutually atomic
         self.handles: List[RequestHandle] = []
@@ -196,14 +198,19 @@ class GraphService:
         :class:`GraphStoreCache` (ignored when ``cache=`` is given).
     workers: number of draining threads. 1 gives strict FIFO execution;
         more overlap store builds of different graphs.
-    default_geom / default_use_dbg / default_path: per-request
-        defaults; each submit() may override.
+    default_geom / default_use_dbg / default_path / default_shard:
+        per-request defaults; each submit() may override (``shard``
+        selects multi-device execution with per-device lane ownership
+        — see ``repro.sharding``; ``submit(shard=False)`` opts a single
+        request out of a service-wide default).
     max_plans_per_store: bound of each store's plan LRU.
     max_executors: bound of the warm-path Executor LRU. Store and plan
         caches make re-PLANNING cheap, but a fresh Executor re-traces
         the jit'd iteration on every request; caching executors keyed
-        like coalescing keys (store, app, config, path) lets warm
-        repeats reuse the compiled function. Executors of an evicted
+        like coalescing keys (store, app, config, path, shard) lets
+        warm repeats reuse the compiled function (each shard variant of
+        an otherwise-identical request is its own entry). Executors of
+        an evicted
         store are purged with it (they would otherwise keep its device
         arrays alive behind the byte budget's back).
     executor_byte_budget: optional device-byte bound on the same LRU,
@@ -227,6 +234,7 @@ class GraphService:
                  default_geom: Optional[Geometry] = None,
                  default_use_dbg: bool = True,
                  default_path: Optional[str] = None,
+                 default_shard=None,
                  max_plans_per_store: Optional[int] = None,
                  max_executors: int = 64,
                  executor_byte_budget: Optional[int] = None,
@@ -243,6 +251,7 @@ class GraphService:
         self.default_geom = default_geom or Geometry()
         self.default_use_dbg = default_use_dbg
         self.default_path = default_path
+        self.default_shard = default_shard
         self.max_plans_per_store = max_plans_per_store
         self.max_executors = max_executors
         self.executor_byte_budget = executor_byte_budget
@@ -518,6 +527,7 @@ class GraphService:
                use_dbg: Optional[bool] = None,
                max_iters: Optional[int] = None,
                path: Optional[str] = None,
+               shard=None,
                **cfg) -> RequestHandle:
         """Enqueue one request; returns immediately with a
         :class:`RequestHandle`.
@@ -527,8 +537,12 @@ class GraphService:
         its store still cached). ``app`` is a builtin name (coalescable;
         parameterize via ``app_kwargs``) or a prebuilt :class:`GASApp`
         (coalesced only with submissions of that same instance — the
-        service can't see inside arbitrary closures). Extra kwargs
-        become :class:`PlanConfig` fields, as in :func:`repro.api.compile`.
+        service can't see inside arbitrary closures). ``shard`` requests
+        multi-device execution (``True`` = all local devices, int n =
+        first n; ``False`` opts out of a service ``default_shard``;
+        ``None`` = the service default) — sharded and unsharded requests
+        never coalesce with each other. Extra kwargs become
+        :class:`PlanConfig` fields, as in :func:`repro.api.compile`.
 
         Submitting a Graph does NOT retain it past the request: if its
         store is later evicted, a fingerprint-only resubmit needs the
@@ -542,6 +556,21 @@ class GraphService:
         geom = geom or self.default_geom
         use_dbg = self.default_use_dbg if use_dbg is None else bool(use_dbg)
         path = path or self.default_path
+        shard = self.default_shard if shard is None else shard
+        if shard is False:
+            shard = None
+        elif shard is True:
+            # resolve to a count NOW: True == 1 in tuple keys, so leaving
+            # the bool in job/executor keys would coalesce an all-devices
+            # request with a one-device one
+            import jax
+            shard = jax.device_count()
+        if shard is not None and (not isinstance(shard, int)
+                                  or isinstance(shard, bool) or shard < 1):
+            # device sequences aren't hashable job keys; serving keeps
+            # the coalescable forms only
+            raise ValueError("submit(shard=...) accepts True/False or a "
+                             f"positive int device count, got {shard!r}")
 
         graph_obj = graph if isinstance(graph, Graph) else None
         fp = resolve_fingerprint(graph, fingerprint)
@@ -560,7 +589,8 @@ class GraphService:
                     f"fingerprint {fp[:12]}… is neither registered nor "
                     f"cached; pass the Graph or register() it first")
 
-        job_key = (skey, app_token, config.cache_key(), max_iters, path)
+        job_key = (skey, app_token, config.cache_key(), max_iters, path,
+                   shard)
         with self._lock:
             # closed-check is atomic with the enqueue: close() inserts
             # its sentinels under this same lock, so a submit can never
@@ -580,7 +610,8 @@ class GraphService:
                 job.handles.append(handle)
             else:
                 job = _Job(job_key, skey, graph_obj, app_name, make_app,
-                           config, geom, use_dbg, max_iters, path)
+                           config, geom, use_dbg, max_iters, path,
+                           shard=shard)
                 job.handles.append(handle)
                 self._inflight[job_key] = job
                 self._skey_jobs[skey] = self._skey_jobs.get(skey, 0) + 1
@@ -620,7 +651,8 @@ class GraphService:
 
         # max_iters is a run() argument, not executor state, so it is
         # deliberately absent from the executor key (unlike the job key)
-        exec_key = (job.skey, job.key[1], job.config.cache_key(), job.path)
+        exec_key = (job.skey, job.key[1], job.config.cache_key(), job.path,
+                    job.shard)
         t0 = time.perf_counter()
         with self.cache.lease(job.skey, builder) as (store, store_hit):
             t_store_ms = (time.perf_counter() - t0) * 1e3
@@ -636,8 +668,13 @@ class GraphService:
                 t0 = time.perf_counter()
                 bundle = store.plan(job.config)
                 t_plan_ms = (time.perf_counter() - t0) * 1e3
-                ex = Executor(store, bundle, job.make_app(),
-                              path=job.path)
+                if job.shard is not None:
+                    from ..sharding.executor import ShardedExecutor
+                    ex = ShardedExecutor(store, bundle, job.make_app(),
+                                         devices=job.shard, path=job.path)
+                else:
+                    ex = Executor(store, bundle, job.make_app(),
+                                  path=job.path)
                 nbytes = ex.memory_footprint()
                 with self._lock:
                     if exec_key in self._executors:

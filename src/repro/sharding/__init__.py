@@ -1,0 +1,34 @@
+"""Sharding: per-device lane ownership with plan-aware placement.
+
+ReGraph scales by giving every lightweight pipeline its own memory
+channels; this package applies the same argument one level up — one
+DEVICE per lane group, edges fully sharded, the vertex property array
+replicated (it is the small side). The shard unit is the packed lane
+payload (``kernels.ops.pack_lane``): lanes are tile-disjoint by
+construction, so the cross-device merge is a single psum/pmin/pmax-style
+reduction per iteration per property.
+
+    placement  — LPT lane→device assignment from the perf model's
+                 per-lane estimates (Little/Big interleaved per device),
+                 with the greedy balance bound and keep= re-placement
+                 for streaming
+    executor   — ShardedLanes materialization (device_put to owners,
+                 move/reuse accounting) + ShardedExecutor (per-device
+                 local execution, one cross-device merge, Apply)
+    specs      — off-paper LM-side parameter/activation sharding rules
+                 (Megatron/FSDP-style; unrelated to the graph engine)
+
+Entry points: ``api.compile(..., shard=...)``,
+``GraphStore.executor(app, shard=...)``, ``GraphStore.shard()``, and
+``GraphService.submit(..., shard=...)``. Streaming deltas re-place only
+dirty lanes and reuse resident payloads for clean ones
+(``shards_moved`` / ``shard_bytes_moved`` in the apply stats).
+"""
+from .executor import (ShardedExecutor, ShardedLanes, materialize_sharded,
+                       resolve_devices)
+from .placement import LanePlacement, lane_estimates, place_lanes
+
+__all__ = [
+    "LanePlacement", "ShardedExecutor", "ShardedLanes", "lane_estimates",
+    "materialize_sharded", "place_lanes", "resolve_devices",
+]

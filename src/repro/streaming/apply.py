@@ -18,7 +18,10 @@ partitions, so :func:`apply_delta` redoes only those:
      keep bit-identical stats, so re-classification and re-scheduling
      are milliseconds) and seed structurally-unchanged lanes with the
      pre-delta packed device payloads — untouched lanes are neither
-     re-packed nor re-uploaded;
+     re-packed nor re-uploaded. Sharded materializations carry over the
+     same way, with clean lanes additionally PINNED to their owner
+     device (only dirty lanes are re-placed by LPT around them);
+     ``shards_moved`` / ``shard_bytes_moved`` account what transferred;
   5. chain the new snapshot fingerprint from ``(base_fp, delta_fp)``.
 
 The permutation is frozen across a delta chain (recomputing DBG would
@@ -256,31 +259,56 @@ def apply_delta(store: GraphStore, delta: GraphDelta) -> DeltaApplyResult:
     plans_rebuilt = 0
     packed_reused = packed_repacked = 0
     packed_bytes_reused = 0
+    shards_moved = shards_reused = 0
+    shard_bytes_moved = shard_bytes_reused = 0
     for old in old_bundles:
         bundle = new_store.plan(old.config)
         plans_rebuilt += 1
         old_packed = old._packed_lanes       # snapshot (flips once)
-        if old_packed is None:
-            continue                          # base never materialized it
+        old_sharded = dict(old._sharded or {})
+        if old_packed is None and not old_sharded:
+            continue                          # base never materialized any
         sig_to_lane = {}
         for j, lane in enumerate(old.plan.lanes):
             sig = _lane_signature(lane, old.big_works)
             if sig:                           # empty lanes pack for free
                 sig_to_lane.setdefault(sig, j)
-        seed = {}
+
+        # (new lane idx, old lane idx) pairs whose entry structure
+        # survived re-scheduling and touch no dirty partition — the
+        # lanes whose device payloads are bit-identical pre/post.
+        # Computed once; the packed and every sharded form reuse it.
+        matches = []
         for i, lane in enumerate(bundle.plan.lanes):
             sig = _lane_signature(lane, bundle.big_works)
             j = sig_to_lane.get(sig)
             if (j is not None
                     and not (_lane_pids(lane, bundle.big_works)
                              & dirty_set)):
-                seed[i] = old_packed[j]
-        bundle._packed_seed = seed or None
-        packed = bundle.packed_lanes()        # eager: keep serving warm
-        packed_reused += bundle.packed_lanes_reused
-        packed_bytes_reused += bundle.packed_bytes_reused
-        packed_repacked += (sum(1 for lane in packed if lane)
-                            - bundle.packed_lanes_reused)
+                matches.append((i, j))
+
+        if old_packed is not None:
+            seed = {i: old_packed[j] for i, j in matches}
+            bundle._packed_seed = seed or None
+            packed = bundle.packed_lanes()    # eager: keep serving warm
+            packed_reused += bundle.packed_lanes_reused
+            packed_bytes_reused += bundle.packed_bytes_reused
+            packed_repacked += (sum(1 for lane in packed if lane)
+                                - bundle.packed_lanes_reused)
+        # sharded forms: clean lanes KEEP their owner device (only dirty
+        # lanes are re-placed by LPT around them) and their resident
+        # per-device payloads are spliced in without re-transfer
+        for devices, old_sh in old_sharded.items():
+            keep, sseed = {}, {}
+            for i, j in matches:
+                keep[i] = old_sh.placement.device_of_lane[j]
+                sseed[i] = old_sh.lanes[j]
+            bundle._shard_seed = (devices, keep, sseed)
+            new_sh = bundle.sharded_lanes(devices)   # eager, like packed
+            shards_moved += new_sh.moved
+            shard_bytes_moved += new_sh.bytes_moved
+            shards_reused += new_sh.reused
+            shard_bytes_reused += new_sh.bytes_reused
     t_replan = time.perf_counter() - t1
 
     stats = {
@@ -297,6 +325,10 @@ def apply_delta(store: GraphStore, delta: GraphDelta) -> DeltaApplyResult:
         "packed_lanes_reused": packed_reused,
         "packed_lanes_repacked": packed_repacked,
         "packed_bytes_reused": int(packed_bytes_reused),
+        "shards_moved": shards_moved,
+        "shard_bytes_moved": int(shard_bytes_moved),
+        "shards_reused": shards_reused,
+        "shard_bytes_reused": int(shard_bytes_reused),
         "t_splice_ms": t_splice * 1e3,
         "t_replan_ms": t_replan * 1e3,
         "t_apply_ms": (time.perf_counter() - t0) * 1e3,

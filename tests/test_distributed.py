@@ -35,24 +35,29 @@ def run_py(code: str, timeout=600):
 
 
 def test_distributed_graph_engine_matches_single():
+    """DistributedEngine now builds directly on the layered API: one
+    GraphStore shared by the single-device baseline and the shard_map
+    path (one plan cache, one preprocessing pass)."""
     run_py("""
         import numpy as np
         from repro.graphs.rmat import rmat
         from repro.core.types import Geometry
         from repro.core import gas
-        from repro.core.engine import HeterogeneousEngine
+        from repro.core.planner import PlanConfig
+        from repro.core.store import GraphStore
         from repro.core.distributed import DistributedEngine
         g = rmat(10, 8, seed=3)
         geom = Geometry(U=1024, W=512, T=512, E_BLK=128, big_batch=4)
+        store = GraphStore(g, geom=geom)
+        cfg = PlanConfig(n_lanes=8)
         for mk, iters in [(lambda: gas.make_pagerank(max_iters=4), 4),
                           (lambda: gas.make_bfs(root=2), 8)]:
             app = mk()
-            p1,_ = HeterogeneousEngine(g, app, geom=geom, n_lanes=8,
-                                       path="ref").run(max_iters=iters)
-            d = DistributedEngine(HeterogeneousEngine(
-                g, app, geom=geom, n_lanes=8, path="ref"))
+            p1,_ = store.executor(app, cfg, path="ref").run(max_iters=iters)
+            d = DistributedEngine(store, app, config=cfg)
             p2,_ = d.run(max_iters=iters)
             assert np.allclose(p1, p2, rtol=1e-5, atol=1e-7), app.name
+        assert store.stats()["cached_plans"] == 1   # one shared plan
         print("OK")
     """)
 
