@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV lines (see benchmarks/common.emit).
   —        bench_fused          fused vs per-entry execution (+ JSON)
   —        bench_streaming      delta apply vs full rebuild (+ JSON)
   —        bench_sharding       sharded vs single-device fused (+ JSON)
+  —        bench_control_plane  p99 update latency, threads vs pool (+ JSON)
 """
 from __future__ import annotations
 
@@ -23,7 +24,7 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: pipelines,heterogeneity,scalability,"
                          "preprocessing,amortization,sota,roofline,serving,"
-                         "fused,streaming,sharding")
+                         "fused,streaming,sharding,control_plane")
     ap.add_argument("--quick", action="store_true",
                     help="smaller graph set (CI-speed)")
     ap.add_argument("--smoke", action="store_true",
@@ -34,10 +35,10 @@ def main() -> None:
     want = (None if args.only == "all"
             else set(args.only.split(",")))
 
-    from . import (bench_fused, bench_heterogeneity, bench_pipelines,
-                   bench_preprocessing, bench_roofline, bench_scalability,
-                   bench_serving, bench_sharding, bench_sota,
-                   bench_streaming)
+    from . import (bench_control_plane, bench_fused, bench_heterogeneity,
+                   bench_pipelines, bench_preprocessing, bench_roofline,
+                   bench_scalability, bench_serving, bench_sharding,
+                   bench_sota, bench_streaming)
 
     suites = [
         ("pipelines", lambda: bench_pipelines.run(
@@ -81,6 +82,11 @@ def main() -> None:
         # per-device dispatch counts, the single cross-device merge,
         # and streaming shard reuse at every tier
         ("sharding", lambda: bench_sharding.run(smoke=args.smoke)),
+        # gates p99 update latency with a process pool <= threads-only
+        # at every tier, and dumps the full ServiceMetrics snapshot
+        # (JSON + Prometheus text) as artifacts
+        ("control_plane", lambda: bench_control_plane.run(
+            smoke=args.quick)),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

@@ -37,6 +37,19 @@ see repro/serve_graph/)::
 Streaming updates flow through :class:`GraphDelta` / :func:`apply_delta`
 (see repro/streaming/); multi-device execution through
 ``compile(shard=...)`` / ``GraphStore.shard()`` (see repro/sharding/).
+
+Serving at scale layers the control plane on top (see repro/control/):
+``GraphService(pool=N)`` moves store builds and delta splices into
+worker processes (:class:`WorkerPool`), submits carry ``priority`` /
+``deadline`` / ``tenant`` through the model-guided scheduler with
+:class:`TenantQuota` admission (typed :class:`QueueFull` /
+:class:`QuotaExceeded` / :class:`DeadlineExpired` rejections), and
+:class:`ControlPlane` + :func:`serve_jobs` expose persistent job
+records over an HTTP JSON API::
+
+    plane = api.ControlPlane(svc, job_store=api.JobStore("jobs.jsonl"))
+    server, url = api.serve_jobs(plane)        # POST {url}/jobs, ...
+
 docs/ARCHITECTURE.md maps the whole system.
 """
 from __future__ import annotations
@@ -44,6 +57,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Union
 
+from .control import (ControlPlane, DeadlineExpired, JobRecord,
+                      JobScheduler, JobStore, QueueFull, QuotaExceeded,
+                      RejectedJob, TenantQuota, WorkerCrashed, WorkerPool,
+                      serve_jobs)
 from .core.executor import Executor
 from .core.gas import (BUILTIN_APPS, GASApp, make_bfs, make_closeness,
                        make_pagerank, make_sssp, make_wcc)
@@ -57,18 +74,22 @@ from .serve_graph import (GraphService, GraphStoreCache, RequestHandle,
 from .sharding import (LanePlacement, ShardedExecutor, ShardedLanes,
                        place_lanes)
 from .streaming import (GraphDelta, apply_delta, apply_delta_to_graph,
-                        chain_fingerprint, make_delta, random_delta)
+                        chain_fingerprint, make_delta, random_delta,
+                        rebuild_plans, splice_delta)
 
 __all__ = [
-    "BUILTIN_APPS", "CompiledApp", "Executor", "GASApp", "Geometry",
-    "GraphDelta", "GraphService", "GraphStore", "GraphStoreCache", "HW",
-    "LanePlacement", "PlanBundle", "PlanConfig", "Planner",
-    "RequestHandle", "SchedulePlan", "ServiceMetrics", "ShardedExecutor",
-    "ShardedLanes", "TPU_V5E", "TPU_V5E_SCALED", "UpdateResult",
-    "apply_delta", "apply_delta_to_graph", "chain_fingerprint", "compile",
-    "graph_fingerprint", "make_bfs", "make_closeness", "make_delta",
-    "make_pagerank", "make_sssp", "make_wcc", "place_lanes",
-    "random_delta",
+    "BUILTIN_APPS", "CompiledApp", "ControlPlane", "DeadlineExpired",
+    "Executor", "GASApp", "Geometry", "GraphDelta", "GraphService",
+    "GraphStore", "GraphStoreCache", "HW", "JobRecord", "JobScheduler",
+    "JobStore", "LanePlacement", "PlanBundle", "PlanConfig", "Planner",
+    "QueueFull", "QuotaExceeded", "RejectedJob", "RequestHandle",
+    "SchedulePlan", "ServiceMetrics", "ShardedExecutor", "ShardedLanes",
+    "TPU_V5E", "TPU_V5E_SCALED", "TenantQuota", "UpdateResult",
+    "WorkerCrashed", "WorkerPool", "apply_delta", "apply_delta_to_graph",
+    "chain_fingerprint", "compile", "graph_fingerprint", "make_bfs",
+    "make_closeness", "make_delta", "make_pagerank", "make_sssp",
+    "make_wcc", "place_lanes", "random_delta", "rebuild_plans",
+    "serve_jobs", "splice_delta",
 ]
 
 

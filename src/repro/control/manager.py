@@ -1,0 +1,225 @@
+"""ControlPlane — a GraphService with job records and an HTTP face.
+
+Ties the pieces together: every submission becomes a
+:class:`~repro.control.jobs.JobRecord` whose lifecycle is driven by
+the service's observer callbacks (queued → running → done/failed/
+expired), results are fetched by job id, and the whole thing exposes
+one merged metrics snapshot (service + scheduler + pool + store cache
++ job store) for ``GET /metrics``. The service can be passed in (the
+control plane then shares it and leaves closing it to the owner) or
+constructed from kwargs (owned, closed with the plane).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+from ..graphs.formats import Graph
+from ..serve_graph.service import GraphService, RequestHandle
+from ..streaming import GraphDelta
+from .jobs import JobRecord, JobState, JobStore
+from .scheduler import QueueFull, RejectedJob
+
+__all__ = ["ControlPlane"]
+
+# observer event -> job state (shed maps to EXPIRED: the deadline
+# passed; cancelled is driven by cancel_job, not the observer)
+_EVENT_STATE = {
+    "queued": JobState.QUEUED,
+    "running": JobState.RUNNING,
+    "done": JobState.DONE,
+    "failed": JobState.FAILED,
+    "shed": JobState.EXPIRED,
+    "cancelled": JobState.CANCELLED,
+}
+
+
+class ControlPlane:
+    """Job-oriented management layer over a :class:`GraphService`.
+
+    Parameters
+    ----------
+    service: an existing service to manage (not closed by this plane);
+        None builds one from ``service_kwargs`` (owned).
+    jobs: a :class:`JobStore` (e.g. with ``persist_path`` set); None
+        builds a default one.
+    """
+
+    def __init__(self, service: Optional[GraphService] = None, *,
+                 jobs: Optional[JobStore] = None, **service_kwargs):
+        self._owns_service = service is None
+        self.service = service or GraphService(**service_kwargs)
+        self.jobs = jobs or JobStore()
+        self._lock = threading.Lock()
+        self._handles: Dict[str, RequestHandle] = {}
+        self._http_server = None
+
+    # -- lifecycle ------------------------------------------------------
+    def __enter__(self) -> "ControlPlane":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self, wait: bool = True) -> None:
+        if self._http_server is not None:
+            self._http_server.shutdown()
+            self._http_server = None
+        if self._owns_service:
+            self.service.close(wait=wait)
+
+    # -- job submission -------------------------------------------------
+    def register(self, graph: Graph, **kw) -> str:
+        return self.service.register(graph, **kw)
+
+    def submit_job(self, graph=None, app: str = "pagerank", *,
+                   fingerprint: Optional[str] = None,
+                   tenant: str = "default", priority: int = 0,
+                   deadline: Optional[float] = None,
+                   **submit_kwargs) -> JobRecord:
+        """Submit a run as a tracked job. Returns its record
+        immediately; fetch the outcome with :meth:`result`. Admission
+        rejections and bad requests still raise (typed), but the
+        record survives in state ``rejected``/``failed`` so the
+        refusal is queryable afterwards."""
+        rec = self.jobs.create(
+            kind="run", tenant=tenant, priority=priority,
+            deadline=deadline, app=app if isinstance(app, str) else app.name,
+            fingerprint=(fingerprint if fingerprint is not None
+                         else graph if isinstance(graph, str) else None))
+        jid = rec.id
+        handle_stored = threading.Event()
+
+        def observer(event: str, info: dict) -> None:
+            state = _EVENT_STATE.get(event)
+            if event == "coalesced":
+                self.jobs.mark_coalesced(jid)
+                self.jobs.transition(jid, JobState.QUEUED,
+                                     log="queued (coalesced)")
+            elif state is not None:
+                metrics = None
+                if state in JobState.TERMINAL:
+                    # a job can finish before submit_job() stores the
+                    # handle — wait for it so terminal records always
+                    # carry their request metrics
+                    handle_stored.wait(5.0)
+                    metrics = self._metrics_of(jid)
+                self.jobs.transition(jid, state,
+                                     error=info.get("error"),
+                                     metrics=metrics)
+        try:
+            handle = self.service.submit(
+                graph, app, fingerprint=fingerprint, tenant=tenant,
+                priority=priority, deadline=deadline, observer=observer,
+                **submit_kwargs)
+        except RejectedJob as exc:
+            kind = ("queue full" if isinstance(exc, QueueFull)
+                    else "quota exceeded")
+            self.jobs.transition(jid, JobState.REJECTED, error=str(exc),
+                                 log=f"rejected at admission: {kind}")
+            raise
+        except Exception as exc:
+            self.jobs.transition(jid, JobState.FAILED, error=str(exc))
+            raise
+        with self._lock:
+            self._handles[jid] = handle
+        handle_stored.set()
+        with self._lock:
+            if len(self._handles) > 4 * self.jobs.max_records:
+                # results of long-forgotten jobs: drop oldest resolved
+                for k in list(self._handles):
+                    if len(self._handles) <= self.jobs.max_records:
+                        break
+                    if self._handles[k].done():
+                        del self._handles[k]
+        return rec
+
+    def _metrics_of(self, job_id: str) -> Optional[dict]:
+        with self._lock:
+            h = self._handles.get(job_id)
+        return h.metrics.as_dict() if h is not None else None
+
+    def result(self, job_id: str, timeout: Optional[float] = None):
+        """Block for a job's (props, meta); raises its failure (typed
+        scheduler errors included) like ``RequestHandle.result``."""
+        with self._lock:
+            h = self._handles.get(job_id)
+        if h is None:
+            raise KeyError(f"unknown or unretained job {job_id!r}")
+        return h.result(timeout=timeout)
+
+    def cancel_job(self, job_id: str) -> bool:
+        with self._lock:
+            h = self._handles.get(job_id)
+        if h is None or not self.service.cancel(h):
+            return False
+        self.jobs.transition(job_id, JobState.CANCELLED,
+                             error="cancelled",
+                             log="cancelled by request")
+        return True
+
+    # -- streaming updates as jobs --------------------------------------
+    def update_job(self, fingerprint: str, delta: GraphDelta,
+                   *, tenant: str = "default", **kw) -> JobRecord:
+        """Run a streaming update synchronously as a tracked job (an
+        update re-keys shared cache state; callers need the new
+        fingerprint before their next submit, so there is no async
+        form). The record's metrics carry the apply stats."""
+        rec = self.jobs.create(kind="update", tenant=tenant,
+                               app="update", fingerprint=fingerprint)
+        self.jobs.transition(rec.id, JobState.RUNNING)
+        try:
+            res = self.service.update(fingerprint, delta, **kw)
+        except Exception as exc:
+            self.jobs.transition(rec.id, JobState.FAILED, error=str(exc))
+            raise
+        self.jobs.transition(
+            rec.id, JobState.DONE,
+            metrics={"fingerprint": res.fingerprint, "mode": res.mode,
+                     "retired": res.retired,
+                     "t_update_ms": res.t_update_ms,
+                     "stats": res.stats},
+            log=f"update applied: {fingerprint[:12]}… -> "
+                f"{res.fingerprint[:12]}… ({res.mode})")
+        return self.jobs.get(rec.id)
+
+    # -- reporting ------------------------------------------------------
+    def metrics_snapshot(self) -> dict:
+        snap = self.service.stats()
+        snap["jobs"] = self.jobs.stats()
+        return snap
+
+    def prometheus(self) -> str:
+        """Service metrics in Prometheus text form, with control-plane
+        gauges (scheduler depth, pool and job-store state) appended."""
+        out = [self.service.metrics.render_prometheus()]
+        sched = self.service._scheduler.stats()
+        out.append("# HELP regraph_scheduler_depth Queued jobs.\n"
+                   "# TYPE regraph_scheduler_depth gauge\n"
+                   f"regraph_scheduler_depth {sched['depth']}\n")
+        pool = self.service._pool
+        if pool is not None:
+            p = pool.stats()
+            out.append("# HELP regraph_pool_jobs_total Jobs run in the "
+                       "process pool.\n"
+                       "# TYPE regraph_pool_jobs_total counter\n"
+                       f"regraph_pool_jobs_total {p['jobs']}\n"
+                       "# HELP regraph_pool_crashes_total Worker process "
+                       "crashes.\n"
+                       "# TYPE regraph_pool_crashes_total counter\n"
+                       f"regraph_pool_crashes_total {p['crashes']}\n")
+        j = self.jobs.stats()
+        out.append("# HELP regraph_jobs Jobs by lifecycle state.\n"
+                   "# TYPE regraph_jobs gauge")
+        for state, n in sorted(j["by_state"].items()):
+            out.append(f'regraph_jobs{{state="{state}"}} {n}')
+        return "\n".join(out) + "\n"
+
+    # -- HTTP -----------------------------------------------------------
+    def serve_http(self, host: str = "127.0.0.1", port: int = 0):
+        """Start the JSON job API on a daemon thread; returns
+        ``(server, base_url)``. ``port=0`` picks a free port."""
+        from .http_api import serve_jobs
+        server, url = serve_jobs(self, host=host, port=port)
+        self._http_server = server
+        return server, url

@@ -149,6 +149,29 @@ class GraphStore:
         self._aux = None
         return self
 
+    # -- pickling (control-plane process pool) -------------------------
+    def __getstate__(self) -> dict:
+        """Ship the app-independent state only: locks don't pickle, the
+        plan cache holds locks and device arrays (the receiving side
+        re-plans — blockings make that cheap), and the jax aux rebuilds
+        lazily. Used by ``repro.control.pool`` to move store builds and
+        delta applies into worker processes."""
+        state = self.__dict__.copy()
+        # force the identity to a concrete string BEFORE dropping caches:
+        # a derived store with a lazy fingerprint must not cross the
+        # process boundary unresolved (its source may be None there)
+        state["_fp"] = self.fingerprint()
+        state["_plan_cache"] = None
+        state["_plan_lock"] = None
+        state["_aux"] = None
+        return state
+
+    def __setstate__(self, state: dict) -> None:
+        self.__dict__.update(state)
+        self._plan_cache = collections.OrderedDict()
+        self._plan_lock = threading.RLock()
+        self._aux = None
+
     def fingerprint(self) -> str:
         """Identity of the graph this store was built from: the source
         graph's content hash, or — for delta-derived stores — the
@@ -249,6 +272,17 @@ class GraphStore:
                 self._plan_cache.popitem(last=False)
                 self.plan_evictions += 1
         return bundle
+
+    def peek_plan(self, config=None):
+        """Return the cached :class:`PlanBundle` for ``config`` WITHOUT
+        building on a miss and without touching LRU recency (a pure
+        peek). The control-plane scheduler uses this to read
+        ``plan.est_makespan`` as a queued job's cost estimate — an
+        estimate must never mutate cache state or trigger a build."""
+        from .planner import PlanConfig
+        config = config or PlanConfig()
+        with self._plan_lock:
+            return self._plan_cache.get(config.cache_key())
 
     def has_plan(self, config=None) -> bool:
         """True when ``plan(config)`` would hit the cache (does NOT touch

@@ -5,10 +5,18 @@ moves through the service (queue wait → store build/fetch → plan →
 execute); :class:`ServiceMetrics` aggregates them into hit/miss
 counters and bounded latency reservoirs with percentile queries. All
 mutation is lock-guarded — worker threads record concurrently.
+
+Two export forms feed the control plane's ``GET /metrics`` endpoint
+and the benchmark artifact dumps: :meth:`ServiceMetrics.snapshot_json`
+(the snapshot dict as JSON) and :meth:`ServiceMetrics.render_prometheus`
+(Prometheus text exposition — counters, gauges, and the stage latency
+percentiles as ``quantile``-labeled gauges, with per-tenant admission
+outcomes as labeled series).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import threading
 from collections import deque
 from typing import Deque, Dict, Optional
@@ -28,6 +36,7 @@ class RequestMetrics:
     request_id: int
     app: str
     fingerprint: str
+    tenant: str = "default"
     coalesced: bool = False           # attached to an in-flight twin job
     store_hit: Optional[bool] = None
     plan_hit: Optional[bool] = None
@@ -96,16 +105,53 @@ class ServiceMetrics:
         self.packed_lanes_reused = 0
         self.packed_lanes_repacked = 0
         self.packed_bytes_reused = 0
+        # control-plane admission outcomes
+        self.rejected_queue_full = 0
+        self.rejected_quota = 0
+        self.shed_deadline = 0        # expired-deadline jobs load-shed
+        # tenant -> outcome counters (submitted/completed/failed/
+        # coalesced/rejected/shed); bounds itself to tenants seen
+        self._tenants: Dict[str, Dict[str, int]] = {}
         self._stage: Dict[str, _Reservoir] = {
             s: _Reservoir(reservoir_size) for s in self.STAGES}
         self._queue_depth_fn = None  # wired by the service
 
+    def _tenant(self, tenant: str) -> Dict[str, int]:
+        t = self._tenants.get(tenant)
+        if t is None:
+            t = self._tenants[tenant] = {
+                "submitted": 0, "completed": 0, "failed": 0,
+                "coalesced": 0, "rejected": 0, "shed": 0}
+        return t
+
     # -- recording ------------------------------------------------------
-    def record_submit(self, coalesced: bool) -> None:
+    def record_submit(self, coalesced: bool,
+                      tenant: str = "default") -> None:
         with self._lock:
             self.submitted += 1
+            t = self._tenant(tenant)
+            t["submitted"] += 1
             if coalesced:
                 self.coalesced += 1
+                t["coalesced"] += 1
+
+    def record_rejected(self, kind: str, tenant: str = "default") -> None:
+        """Typed admission rejection: ``kind`` is ``"queue_full"`` or
+        ``"quota"`` (matching the scheduler's exception types)."""
+        with self._lock:
+            if kind == "queue_full":
+                self.rejected_queue_full += 1
+            elif kind == "quota":
+                self.rejected_quota += 1
+            else:
+                raise ValueError(f"unknown rejection kind {kind!r}")
+            self._tenant(tenant)["rejected"] += 1
+
+    def record_shed(self, tenant: str = "default") -> None:
+        """A queued job's deadline expired before a worker reached it."""
+        with self._lock:
+            self.shed_deadline += 1
+            self._tenant(tenant)["shed"] += 1
 
     def record_execution(self, store_hit: bool, plan_hit: bool) -> None:
         with self._lock:
@@ -154,10 +200,13 @@ class ServiceMetrics:
 
     def record_done(self, m: RequestMetrics) -> None:
         with self._lock:
+            t = self._tenant(m.tenant)
             if m.error is None:
                 self.completed += 1
+                t["completed"] += 1
             else:
                 self.failed += 1
+                t["failed"] += 1
             for stage, val in (("queue", m.t_queue_ms),
                                ("store", m.t_store_ms),
                                ("plan", m.t_plan_ms),
@@ -208,6 +257,10 @@ class ServiceMetrics:
                 "packed_lanes_reused": self.packed_lanes_reused,
                 "packed_lanes_repacked": self.packed_lanes_repacked,
                 "packed_bytes_reused": self.packed_bytes_reused,
+                "rejected_queue_full": self.rejected_queue_full,
+                "rejected_quota": self.rejected_quota,
+                "shed_deadline": self.shed_deadline,
+                "tenants": {t: dict(c) for t, c in self._tenants.items()},
                 "queue_depth": self.queue_depth,
             }
             for s in self.STAGES:
@@ -216,3 +269,69 @@ class ServiceMetrics:
         snap["store_hit_rate"] = self.store_hit_rate
         snap["plan_hit_rate"] = self.plan_hit_rate
         return snap
+
+    def snapshot_json(self, **extra) -> str:
+        """The snapshot (plus any ``extra`` top-level keys — services
+        merge cache/scheduler/pool stats in) as a JSON document."""
+        snap = self.snapshot()
+        snap.update(extra)
+        return json.dumps(snap, indent=2, sort_keys=True, default=str)
+
+    def render_prometheus(self, prefix: str = "regraph") -> str:
+        """Prometheus text exposition of the snapshot: monotonic counts
+        as ``counter``, point-in-time values as ``gauge``, stage latency
+        percentiles as ``quantile``-labeled gauges, and the per-tenant
+        breakdown as ``tenant``/``outcome``-labeled series."""
+        snap = self.snapshot()
+        out = []
+
+        def metric(name, mtype, help_, samples):
+            out.append(f"# HELP {prefix}_{name} {help_}")
+            out.append(f"# TYPE {prefix}_{name} {mtype}")
+            for labels, val in samples:
+                if val is None:
+                    val = "NaN"
+                lab = ("{" + ",".join(f'{k}="{v}"' for k, v in labels)
+                       + "}") if labels else ""
+                out.append(f"{prefix}_{name}{lab} {val}")
+
+        metric("requests_total", "counter", "Requests by final outcome.",
+               [((("outcome", o),), snap[o])
+                for o in ("submitted", "completed", "failed", "coalesced")])
+        metric("rejected_total", "counter",
+               "Admission rejections by typed reason.",
+               [((("reason", "queue_full"),), snap["rejected_queue_full"]),
+                ((("reason", "quota"),), snap["rejected_quota"])])
+        metric("shed_total", "counter",
+               "Jobs load-shed after their deadline expired in queue.",
+               [((), snap["shed_deadline"])])
+        metric("cache_events_total", "counter",
+               "Store/plan cache outcomes and evictions.",
+               [((("layer", "store"), ("event", "hit")), snap["store_hits"]),
+                ((("layer", "store"), ("event", "miss")),
+                 snap["store_misses"]),
+                ((("layer", "store"), ("event", "eviction")),
+                 snap["store_evictions"]),
+                ((("layer", "plan"), ("event", "hit")), snap["plan_hits"]),
+                ((("layer", "plan"), ("event", "miss")),
+                 snap["plan_misses"]),
+                ((("layer", "executor"), ("event", "eviction")),
+                 snap["executor_evictions"])])
+        metric("updates_total", "counter",
+               "Streaming delta updates by outcome.",
+               [((("outcome", "applied"),), snap["updates"]),
+                ((("outcome", "failed"),), snap["update_failures"]),
+                ((("outcome", "deferred"),), snap["updates_deferred"])])
+        metric("queue_depth", "gauge", "Jobs currently queued.",
+               [((), snap["queue_depth"])])
+        metric("latency_ms", "gauge",
+               "Stage latency percentiles over the sample reservoir.",
+               [((("stage", s), ("quantile", q)), snap[f"p{p}_{s}_ms"])
+                for s in self.STAGES
+                for p, q in ((50, "0.5"), (99, "0.99"))])
+        metric("tenant_requests_total", "counter",
+               "Per-tenant request outcomes.",
+               [((("tenant", t), ("outcome", o)), c)
+                for t, cs in sorted(snap["tenants"].items())
+                for o, c in cs.items()])
+        return "\n".join(out) + "\n"

@@ -2,12 +2,31 @@
 
 The service turns the library's GraphStore → Planner → Executor stack
 into a long-lived system: requests (graph-or-fingerprint, app, config)
-go into a FIFO queue, worker threads drain it, and two cache layers do
-the heavy lifting — a byte-budgeted LRU of GraphStores across graphs
-(:class:`~.store_cache.GraphStoreCache`) and each store's bounded plan
-LRU within a graph. Identical in-flight requests are coalesced: N
-concurrent PageRank submissions on the same graph execute once and fan
-the result out to every caller's handle.
+go into a scheduled queue, worker threads drain it, and two cache
+layers do the heavy lifting — a byte-budgeted LRU of GraphStores
+across graphs (:class:`~.store_cache.GraphStoreCache`) and each
+store's bounded plan LRU within a graph. Identical in-flight requests
+are coalesced: N concurrent PageRank submissions on the same graph
+execute once and fan the result out to every caller's handle.
+
+Dispatch is model-guided, not FIFO: each job is pushed into a
+:class:`~repro.control.scheduler.JobScheduler` with a priority, an
+optional deadline, and a cost estimate (a measured per-(store, app)
+EWMA when the service has run the job shape before, else the perf
+model's ``PlanBundle.plan.est_makespan`` rescaled by an adaptive
+calibration factor), so urgent work preempt-orders the queue and
+cheap jobs don't starve behind giant builds of equal rank. Admission
+is typed — a full queue raises
+:class:`~repro.control.scheduler.QueueFull`, an over-quota tenant
+:class:`~repro.control.scheduler.QuotaExceeded` — and queued jobs
+whose deadline passes are load-shed with
+:class:`~repro.control.scheduler.DeadlineExpired` on their handles.
+
+With ``pool=`` set, CPU-heavy store builds and delta splices run in a
+:class:`~repro.control.pool.WorkerPool` of separate *processes*, so
+their seconds of hot numpy stop stealing GIL timeslices from
+``update()`` and the jit'd execution path; plan rebuilds and execution
+stay on in-process threads.
 
 Quickstart::
 
@@ -27,7 +46,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import queue
 import threading
 import time
 import traceback
@@ -35,6 +53,9 @@ from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from ..control.pool import WorkerCrashed, WorkerPool
+from ..control.scheduler import (DeadlineExpired, JobScheduler, QueueFull,
+                                 QuotaExceeded, RejectedJob, TenantQuota)
 from ..core.executor import Executor
 from ..core.gas import BUILTIN_APPS, GASApp
 from ..core.planner import PlanConfig
@@ -42,7 +63,7 @@ from ..core.store import GraphStore
 from ..core.types import Geometry
 from ..graphs.formats import Graph
 from ..streaming import (GraphDelta, apply_delta, apply_delta_to_graph,
-                         chain_fingerprint)
+                         chain_fingerprint, rebuild_plans)
 from .fingerprint import StoreKey, resolve_fingerprint, store_key
 from .metrics import RequestMetrics, ServiceMetrics
 from .store_cache import GraphStoreCache
@@ -165,13 +186,13 @@ class _Job:
 
     __slots__ = ("key", "skey", "graph", "app_name", "make_app", "config",
                  "use_dbg", "geom", "max_iters", "path", "shard", "handles",
-                 "t_submit")
+                 "t_submit", "tenant", "priority", "model_est", "observers")
 
     def __init__(self, key, skey: StoreKey, graph: Optional[Graph],
                  app_name: str, make_app, config: PlanConfig,
                  geom: Geometry, use_dbg: bool,
                  max_iters: Optional[int], path: Optional[str],
-                 shard=None):
+                 shard=None, tenant: str = "default", priority: int = 0):
         self.key = key
         self.skey = skey
         self.graph = graph
@@ -183,9 +204,13 @@ class _Job:
         self.max_iters = max_iters
         self.path = path
         self.shard = shard
+        self.tenant = tenant          # the FIRST submitter's tenant; the
+        self.priority = priority      # scheduler charges only that quota
+        self.model_est = None         # est_makespan behind the cost, if any
         # guarded by the service lock: attachment of coalesced twins and
         # the finishing snapshot must be mutually atomic
         self.handles: List[RequestHandle] = []
+        self.observers: List = []     # control-plane lifecycle callbacks
         self.t_submit = time.perf_counter()
 
 
@@ -225,6 +250,21 @@ class GraphService:
         this budget with ``max_plans_per_store`` (and the store cache's
         ``byte_budget``, which counts those payload bytes) to bound
         actual device memory.
+    max_queue_depth: bound on queued jobs; submits past it raise
+        :class:`~repro.control.scheduler.QueueFull` (typed, so callers
+        can shed or retry). None = unbounded.
+    default_quota / quotas: per-tenant token-bucket admission
+        (:class:`~repro.control.scheduler.TenantQuota`; ``quotas`` maps
+        tenant name to an override). An over-quota submit raises
+        :class:`~repro.control.scheduler.QuotaExceeded`. Coalesced
+        duplicates attach to the in-flight job without charging quota
+        or queue depth.
+    pool: CPU offload tier — a
+        :class:`~repro.control.pool.WorkerPool`, or an int to have the
+        service own one with that many worker processes (closed with
+        the service, warmed at construction). When set, store builds
+        and delta splices run in worker processes instead of holding
+        the GIL under a worker thread.
     """
 
     def __init__(self, *, cache: Optional[GraphStoreCache] = None,
@@ -238,6 +278,10 @@ class GraphService:
                  max_plans_per_store: Optional[int] = None,
                  max_executors: int = 64,
                  executor_byte_budget: Optional[int] = None,
+                 max_queue_depth: Optional[int] = None,
+                 default_quota: Optional[TenantQuota] = None,
+                 quotas: Optional[Dict[str, TenantQuota]] = None,
+                 pool: Union[WorkerPool, int, None] = None,
                  metrics: Optional[ServiceMetrics] = None):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
@@ -260,8 +304,23 @@ class GraphService:
             collections.OrderedDict()
         self._executor_bytes = 0
 
-        self._queue: "queue.Queue" = queue.Queue()
-        self.metrics._queue_depth_fn = self._queue.qsize
+        self._scheduler = JobScheduler(
+            max_depth=max_queue_depth, default_quota=default_quota,
+            quotas=quotas, on_shed=self._on_shed)
+        self.metrics._queue_depth_fn = self._scheduler.qsize
+        self._own_pool = isinstance(pool, int)
+        self._pool: Optional[WorkerPool] = (
+            WorkerPool(workers=pool, warm=True) if self._own_pool else pool)
+        # measured job-cost model: (skey, app) -> EWMA seconds, plus an
+        # adaptive scale mapping plan est_makespan (model units) onto
+        # measured seconds — its own lock, it is touched outside the
+        # service lock (cost estimation reads cache state)
+        self._cost_lock = threading.Lock()
+        self._cost_ewma: Dict[tuple, float] = {}
+        self._cost_alpha = 0.3
+        self._model_scale = 1.0
+        self._cost_sum = 0.0
+        self._cost_n = 0
         self._lock = threading.Lock()
         self._inflight: Dict[tuple, _Job] = {}
         # fp -> Graph | _LazyGraph (delta chain); enables cold rebuilds
@@ -289,22 +348,26 @@ class GraphService:
 
     def close(self, wait: bool = True) -> None:
         """Stop accepting work; by default drain the queue and join the
-        workers (each worker eats one sentinel and exits). The closed
-        flag and the sentinels go in under the service lock, atomically
-        with submit()'s enqueue — a racing submit either lands before
-        the sentinels (and is drained) or raises ServiceClosed."""
+        workers (each worker eats one sentinel and exits — sentinels
+        sort after every queued job, so the drain finishes real work
+        first). The closed flag and the sentinels go in under the
+        service lock, atomically with submit()'s enqueue — a racing
+        submit either lands before the sentinels (and is drained) or
+        raises ServiceClosed."""
         with self._lock:
             if self._closed:
                 return
             self._closed = True
             for _ in self._workers:
-                self._queue.put(_SENTINEL)
+                self._scheduler.push_sentinel(_SENTINEL)
         if wait:
             for w in self._workers:
                 w.join()
             with self._lock:
                 self._executors.clear()
                 self._executor_bytes = 0
+        if self._own_pool and self._pool is not None:
+            self._pool.close(wait=wait)
 
     # -- registration ---------------------------------------------------
     def register(self, graph: Graph, *, geom: Optional[Geometry] = None,
@@ -394,7 +457,18 @@ class GraphService:
         if old_key in self.cache:
             try:
                 with self.cache.lease(old_key) as (store, _hit):
-                    result = apply_delta(store, delta)
+                    if self._pool is not None:
+                        # numpy-heavy splice in a worker PROCESS; the
+                        # plan rebuild stays here — the packed device
+                        # payloads it carries over live in this process
+                        t_p = time.perf_counter()
+                        result = self._pool.apply(store, delta)
+                        result.stats.update(rebuild_plans(
+                            store, result.store, result.dirty_pids))
+                        result.stats["t_apply_ms"] = \
+                            (time.perf_counter() - t_p) * 1e3
+                    else:
+                        result = apply_delta(store, delta)
                     # lineage anchor for UNREGISTERED bases: a root
                     # store still knows its source Graph, and capturing
                     # it keeps the chained fingerprint rebuildable after
@@ -510,10 +584,17 @@ class GraphService:
         # rebuilt from a materialized delta chain must keep the chained
         # fingerprint (deltas validate against it), not the content
         # hash of the materialized graph
+        geom = geom or self.default_geom
+        use_dbg = self.default_use_dbg if use_dbg is None else use_dbg
+        if self._pool is not None:
+            # DBG + lexsort + partition stats run in a worker process;
+            # a WorkerCrashed propagates like any builder failure (the
+            # cache lease releases, the job's handles get the error)
+            return self._pool.build_store(
+                graph, geom=geom, use_dbg=use_dbg, fp=fp,
+                max_plans=self.max_plans_per_store)
         return GraphStore(
-            graph,
-            geom=geom or self.default_geom,
-            use_dbg=self.default_use_dbg if use_dbg is None else use_dbg,
+            graph, geom=geom, use_dbg=use_dbg,
             max_plans=self.max_plans_per_store,
             fingerprint=fp)
 
@@ -528,6 +609,10 @@ class GraphService:
                max_iters: Optional[int] = None,
                path: Optional[str] = None,
                shard=None,
+               tenant: str = "default",
+               priority: int = 0,
+               deadline: Optional[float] = None,
+               observer=None,
                **cfg) -> RequestHandle:
         """Enqueue one request; returns immediately with a
         :class:`RequestHandle`.
@@ -548,6 +633,21 @@ class GraphService:
         store is later evicted, a fingerprint-only resubmit needs the
         Graph again — or :meth:`register` it once (registered graphs
         are kept until :meth:`unregister` and always rebuildable).
+
+        Scheduling: ``priority`` (larger drains first), ``deadline``
+        (seconds from now; a job still queued past it is load-shed and
+        its handles raise
+        :class:`~repro.control.scheduler.DeadlineExpired`), and
+        ``tenant`` (admission accounting; see ``default_quota``).
+        Admission may raise the typed
+        :class:`~repro.control.scheduler.QueueFull` /
+        :class:`~repro.control.scheduler.QuotaExceeded` — nothing is
+        enqueued then. A submit that coalesces onto an in-flight job
+        bypasses admission entirely and, if its priority is higher,
+        boosts the queued job's. ``observer`` is a
+        ``(event, job_info_dict)`` callback for the control plane's
+        job records (events: queued, coalesced, running, done, failed,
+        shed).
         """
         if config is not None and cfg:
             raise ValueError("pass either config= or PlanConfig kwargs, "
@@ -591,6 +691,12 @@ class GraphService:
 
         job_key = (skey, app_token, config.cache_key(), max_iters, path,
                    shard)
+        # cost estimation reads the store/plan caches (their own locks;
+        # the eviction hook re-enters the service lock, so peeking from
+        # under it would invert the order) — do it before locking
+        cost, model_est = self._estimate_cost(skey, app_name, config)
+        abs_deadline = (None if deadline is None
+                        else time.monotonic() + deadline)
         with self._lock:
             # closed-check is atomic with the enqueue: close() inserts
             # its sentinels under this same lock, so a submit can never
@@ -602,33 +708,174 @@ class GraphService:
             job = self._inflight.get(job_key)
             coalesced = job is not None
             m = RequestMetrics(request_id=rid, app=app_name,
-                               fingerprint=fp, coalesced=coalesced)
+                               fingerprint=fp, tenant=tenant,
+                               coalesced=coalesced)
             handle = RequestHandle(rid, m)
             if coalesced:
                 # piggyback on the identical in-flight job; its single
-                # execution resolves every attached handle
+                # execution resolves every attached handle. No admission
+                # charge — the work already paid its way in — but a
+                # higher-priority twin boosts the queued job (quota
+                # pressure must not invert priorities via coalescing)
                 job.handles.append(handle)
+                handle._job = job
+                if observer is not None:
+                    job.observers.append(observer)
+                if priority > job.priority:
+                    job.priority = priority
+                    self._scheduler.reprioritize(job, priority)
             else:
                 job = _Job(job_key, skey, graph_obj, app_name, make_app,
                            config, geom, use_dbg, max_iters, path,
-                           shard=shard)
+                           shard=shard, tenant=tenant, priority=priority)
+                job.model_est = model_est
                 job.handles.append(handle)
+                handle._job = job
+                if observer is not None:
+                    job.observers.append(observer)
                 self._inflight[job_key] = job
                 self._skey_jobs[skey] = self._skey_jobs.get(skey, 0) + 1
-                self._queue.put(job)
-        self.metrics.record_submit(coalesced)
+                try:
+                    self._scheduler.push(job, tenant=tenant,
+                                         priority=priority,
+                                         deadline=abs_deadline, cost=cost)
+                except RejectedJob as exc:
+                    # typed rejection: nothing enqueued — unwind the
+                    # bookkeeping so the key isn't poisoned in-flight
+                    del self._inflight[job_key]
+                    left = self._skey_jobs.get(skey, 1) - 1
+                    if left <= 0:
+                        self._skey_jobs.pop(skey, None)
+                    else:
+                        self._skey_jobs[skey] = left
+                    kind = ("queue_full" if isinstance(exc, QueueFull)
+                            else "quota")
+                    self.metrics.record_rejected(kind, tenant)
+                    raise
+        self.metrics.record_submit(coalesced, tenant)
+        self._notify(job, "coalesced" if coalesced else "queued",
+                     request_id=rid)
         return handle
 
     def run(self, graph=None, app="pagerank", *, timeout=None, **kw):
         """Synchronous convenience: submit + wait."""
         return self.submit(graph, app, **kw).result(timeout=timeout)
 
+    def cancel(self, handle: RequestHandle) -> bool:
+        """Detach one handle from its job; the handle then raises
+        :class:`concurrent.futures.CancelledError`. Returns False if
+        the request already resolved. Cancelling the LAST handle of a
+        still-queued job removes the job from the queue entirely; a
+        job already executing runs to completion (its result simply
+        has no one left to fan out to)."""
+        import concurrent.futures
+        job = getattr(handle, "_job", None)
+        if job is None:
+            return False
+        do_retire = removed_job = False
+        with self._lock:
+            if handle.done():
+                return False
+            try:
+                job.handles.remove(handle)
+            except ValueError:       # _finish snapshotted concurrently
+                return False
+            if not job.handles and self._inflight.get(job.key) is job:
+                if self._scheduler.remove(job):   # still queued
+                    removed_job = True
+                    self._inflight.pop(job.key, None)
+                    left = self._skey_jobs.get(job.skey, 1) - 1
+                    if left <= 0:
+                        self._skey_jobs.pop(job.skey, None)
+                        if job.skey in self._retire_pending:
+                            self._retire_pending.discard(job.skey)
+                            do_retire = True
+                    else:
+                        self._skey_jobs[job.skey] = left
+        if do_retire:
+            self.cache.retire(job.skey)
+        m = handle.metrics
+        m.error = "cancelled"
+        m.t_total_ms = (time.perf_counter() - handle._t_submit) * 1e3
+        self.metrics.record_done(m)
+        handle._set_exception(concurrent.futures.CancelledError(
+            f"request {handle.request_id} cancelled"))
+        if removed_job:
+            self._notify(job, "cancelled")
+        return True
+
+    # -- cost model ------------------------------------------------------
+    def _estimate_cost(self, skey: StoreKey, app_name: str,
+                       config: PlanConfig) -> Tuple[float, Optional[float]]:
+        """Predict a job's runtime in seconds for queue ordering.
+        Preference order: the measured EWMA for this (store, app)
+        shape; the perf model's ``est_makespan`` (rescaled by the
+        adaptive calibration factor) when store and plan are already
+        cached; the global measured average. Returns ``(seconds,
+        raw model estimate or None)`` — pure peeks only, an estimate
+        must never build anything or touch LRU recency."""
+        with self._cost_lock:
+            ew = self._cost_ewma.get((skey, app_name))
+            scale = self._model_scale
+            avg = self._cost_sum / self._cost_n if self._cost_n else 0.0
+        if ew is not None:
+            return ew, None
+        store = self.cache.peek(skey)
+        if store is not None:
+            bundle = store.peek_plan(config)
+            if bundle is not None:
+                est = float(bundle.plan.est_makespan)
+                return est * scale, est
+        return avg, None
+
+    def _record_cost(self, job: _Job, seconds: float) -> None:
+        """Fold one measured (store + plan + execute) duration into the
+        EWMA for the job's shape, and — when the perf model estimated
+        this job — into the model→wall-clock calibration scale."""
+        with self._cost_lock:
+            k = (job.skey, job.app_name)
+            old = self._cost_ewma.get(k)
+            a = self._cost_alpha
+            self._cost_ewma[k] = (seconds if old is None
+                                  else (1 - a) * old + a * seconds)
+            if len(self._cost_ewma) > 4096:     # bound: drop the oldest
+                self._cost_ewma.pop(next(iter(self._cost_ewma)))
+            self._cost_sum += seconds
+            self._cost_n += 1
+            if job.model_est:
+                ratio = seconds / job.model_est
+                self._model_scale = (1 - a) * self._model_scale + a * ratio
+
     # -- worker ---------------------------------------------------------
+    def _notify(self, job: "_Job", event: str, **info) -> None:
+        """Fire the job's control-plane observers (outside all service
+        locks; observers must never be able to break serving)."""
+        if not isinstance(job, _Job) or not job.observers:
+            return
+        info.update(app=job.app_name, fingerprint=job.skey[0],
+                    tenant=job.tenant)
+        for cb in list(job.observers):
+            try:
+                cb(event, info)
+            except Exception:
+                pass
+
+    def _on_shed(self, job: "_Job") -> None:
+        """Scheduler callback (fired outside its lock) for a queued job
+        whose deadline expired: fail every attached handle with the
+        typed error and release the job's bookkeeping."""
+        self.metrics.record_shed(job.tenant)
+        waited = time.perf_counter() - job.t_submit
+        self._finish(job, error=DeadlineExpired(
+            f"job for app {job.app_name!r} load-shed: deadline expired "
+            f"after {waited:.3f}s in queue"), event="shed")
+
     def _worker_loop(self) -> None:
         while True:
-            job = self._queue.get()
+            job = self._scheduler.pop()
             if job is _SENTINEL:
                 return
+            self._notify(job, "running")
             try:
                 self._execute(job)
             except BaseException as exc:   # never kill the worker
@@ -688,6 +935,8 @@ class GraphService:
             t_execute_ms = (time.perf_counter() - t0) * 1e3
 
         self.metrics.record_execution(store_hit, plan_hit)
+        self._record_cost(job,
+                          (t_store_ms + t_plan_ms + t_execute_ms) / 1e3)
         self._finish(job, result=result, store_hit=store_hit,
                      plan_hit=plan_hit, t_queue_ms=t_queue_ms,
                      t_store_ms=t_store_ms, t_plan_ms=t_plan_ms,
@@ -695,7 +944,8 @@ class GraphService:
 
     def _finish(self, job: _Job, result=None, error=None, store_hit=None,
                 plan_hit=None, t_queue_ms=None, t_store_ms=None,
-                t_plan_ms=None, t_execute_ms=None) -> None:
+                t_plan_ms=None, t_execute_ms=None,
+                event: Optional[str] = None) -> None:
         # unlink and snapshot the handle list atomically: a twin either
         # attaches before this (and is resolved below) or finds the job
         # gone and starts a fresh execution — never lost in between
@@ -738,6 +988,9 @@ class GraphService:
             else:
                 self.metrics.record_done(m)
                 h._set_result(result)
+        self._notify(job, event or ("failed" if error is not None
+                                    else "done"),
+                     error=(None if error is None else str(error)))
 
     # -- reporting ------------------------------------------------------
     def stats(self) -> dict:
@@ -747,6 +1000,8 @@ class GraphService:
         return {
             "service": self.metrics.snapshot(),
             "store_cache": self.cache.stats(),
+            "scheduler": self._scheduler.stats(),
+            "pool": self._pool.stats() if self._pool is not None else None,
             "registered_graphs": len(self._registry),
             "cached_executors": n_exec,
             "executor_bytes": exec_bytes,

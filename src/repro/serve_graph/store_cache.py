@@ -113,6 +113,17 @@ class GraphStoreCache:
                 waiter = e
             waiter.ready.wait()     # then re-examine: ready or removed
 
+    def peek(self, key: StoreKey) -> Optional[GraphStore]:
+        """Non-counting, non-touching read: the store if it is cached
+        and ready, else None. The scheduler's cost estimator uses this —
+        an estimate must not distort hit rates or LRU order, and must
+        never block on an in-flight build."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None or not e.ready.is_set():
+                return None
+            return e.store
+
     def get_or_build(self, key: StoreKey,
                      builder: Callable[[], GraphStore]
                      ) -> Tuple[GraphStore, bool]:

@@ -12,11 +12,13 @@ layer surfaces it as ``GraphService.update(fp, delta)`` with snapshot
 semantics (in-flight requests finish on the old store; new submits see
 the new fingerprint).
 """
-from .apply import DeltaApplyResult, apply_delta
+from .apply import (BULK_THRESHOLD, DeltaApplyResult, apply_delta,
+                    rebuild_plans, splice_delta)
 from .delta import (GraphDelta, apply_delta_to_graph, chain_fingerprint,
                     edge_keys, make_delta, random_delta)
 
 __all__ = [
-    "DeltaApplyResult", "GraphDelta", "apply_delta", "apply_delta_to_graph",
-    "chain_fingerprint", "edge_keys", "make_delta", "random_delta",
+    "BULK_THRESHOLD", "DeltaApplyResult", "GraphDelta", "apply_delta",
+    "apply_delta_to_graph", "chain_fingerprint", "edge_keys", "make_delta",
+    "random_delta", "rebuild_plans", "splice_delta",
 ]

@@ -7,10 +7,21 @@ partitions, so :func:`apply_delta` redoes only those:
 
   1. map the delta's edges through the store's FROZEN permutation and
      bucket them by dst-range partition — the touched set is "dirty";
-  2. for each dirty partition, merge the delta into its (src, dst)-
-     sorted segment with searchsorted splices (no sort of clean data)
-     and recompute its :class:`PartitionInfo` via the same helper the
-     cold build uses;
+  2. merge the delta into the dirty segments. Two interchangeable
+     merge paths produce bit-identical edges, chosen by the dirty
+     fraction (the cost-model guidance ROADMAP item 4 asks for):
+     *splice* — per-partition searchsorted insert/mask, no sort of
+     clean data, wins when few partitions are dirty; *bulk sort* — one
+     global lexsort of (kept dirty edges + adds), wins when churn is
+     uniform and most partitions are dirty (per-partition splices then
+     degenerate into many small sorts' worth of passes and lose to the
+     single lexsort a cold rebuild would do — the 0.41x uniform-churn
+     regression in BENCH_streaming.json). Above
+     ``bulk_threshold`` dirty fraction the bulk path is taken, so
+     incremental apply is never slower than a rebuild; the chosen path
+     lands in ``DeltaApplyResult.stats["path"]``. Either way each dirty
+     partition's :class:`PartitionInfo` is recomputed via the same
+     helper the cold build uses;
   3. splice the new segments between the untouched ones (one
      concatenate per array — memcpy, not sort) into a *derived* store
      that shares the base's permutation and every clean blocking;
@@ -52,7 +63,13 @@ from ..graphs.formats import Graph, freeze
 from .delta import (GraphDelta, _validate_against, chain_fingerprint,
                     edge_keys, locate_edges)
 
-__all__ = ["apply_delta", "DeltaApplyResult"]
+__all__ = ["apply_delta", "splice_delta", "rebuild_plans",
+           "DeltaApplyResult", "BULK_THRESHOLD"]
+
+# dirty-partition fraction above which the one-shot bulk lexsort beats
+# per-partition splices (measured crossover is broad — splices lose
+# badly at ~100% dirty, win badly at ~5%; 0.5 splits the flat middle)
+BULK_THRESHOLD = 0.5
 
 
 @dataclasses.dataclass
@@ -126,6 +143,90 @@ def _merge_segment(store: GraphStore, s, d, w,
     return s_k, d_k, w_k
 
 
+def _merge_dirty_bulk(store, dirty_pids, adds, removes, updates,
+                      weighted: bool) -> Dict[int, tuple]:
+    """High-churn merge path: validate removes/updates per dirty
+    partition (identical checks to :func:`_merge_segment`), then build
+    the post-delta dirty edges with ONE global ``np.lexsort`` over
+    (partition, src, dst) instead of per-partition splices. Returns
+    ``pid -> (src, dst, weights)`` segments bit-identical to what the
+    splice path produces (keys are unique, so the sort order is exactly
+    the splice order)."""
+    a_src, a_dst, a_w = adds
+    r_src, r_dst, r_pid = removes
+    u_src, u_dst, u_w, u_pid = updates
+    U = store.geom.U
+
+    def _missing(what, ks, kd):
+        return lambda i: (f"delta {what} targets edge "
+                          f"{_orig_edge(store, int(ks[i]), int(kd[i]))} "
+                          f"which is not in the base graph")
+
+    kept_s, kept_d, kept_w = [], [], []
+    for p in dirty_pids:
+        info = store.infos[p]
+        lo, hi = info.edge_lo, info.edge_hi
+        s = store.edges["src"][lo:hi]
+        d = store.edges["dst"][lo:hi]
+        w = store.edges["weights"][lo:hi]
+        key = edge_keys(s, d)
+        m_u = u_pid == p
+        if np.any(m_u):
+            su, du = u_src[m_u], u_dst[m_u]
+            pos = locate_edges(key, edge_keys(su, du),
+                               _missing("update", su, du))
+            w = w.copy()
+            w[pos] = u_w[m_u]
+        m_r = r_pid == p
+        if np.any(m_r):
+            sr, dr = r_src[m_r], r_dst[m_r]
+            pos = locate_edges(key, edge_keys(sr, dr),
+                               _missing("remove", sr, dr))
+            keep = np.ones(key.shape[0], dtype=bool)
+            keep[pos] = False
+            s, d, w, key = s[keep], d[keep], w[keep], key[keep]
+        kept_s.append(s)
+        kept_d.append(d)
+        kept_w.append(w)
+
+    # adds validated against the post-remove kept keys, like the splice
+    # path ("already exists" must fire for true duplicates but not for
+    # a removed-then-referenced slot — removes cannot coexist with adds
+    # on one edge by delta construction, so kept keys are the oracle)
+    if a_src.size:
+        kept_key = np.concatenate(
+            [edge_keys(s, d) for s, d in zip(kept_s, kept_d)]
+            or [np.zeros(0, np.int64)])
+        kept_key.sort()
+        ka = edge_keys(a_src, a_dst)
+        if kept_key.size:
+            at = np.minimum(np.searchsorted(kept_key, ka),
+                            kept_key.shape[0] - 1)
+            present = kept_key[at] == ka
+            if np.any(present):
+                i = int(np.argmax(present))
+                raise ValueError(
+                    f"delta adds edge "
+                    f"{_orig_edge(store, int(a_src[i]), int(a_dst[i]))} "
+                    f"which already exists in the base graph (use an "
+                    f"update to change its weight)")
+    add_w = (a_w if (weighted and a_src.size)
+             else np.zeros(a_src.shape[0], np.float32))
+
+    all_s = np.concatenate(kept_s + [a_src])
+    all_d = np.concatenate(kept_d + [a_dst])
+    all_w = np.concatenate(kept_w + [add_w])
+    pid = all_d // U
+    order = np.lexsort((all_d, all_s, pid))     # (pid, src, dst) asc
+    all_s, all_d, all_w, pid = (all_s[order], all_d[order], all_w[order],
+                                pid[order])
+    dirty_arr = np.asarray(dirty_pids, dtype=pid.dtype)
+    los = np.searchsorted(pid, dirty_arr)
+    his = np.searchsorted(pid, dirty_arr + 1)
+    return {int(p): (all_s[lo:hi], all_d[lo:hi], all_w[lo:hi])
+            for p, lo, hi in zip(dirty_pids, los, his)}
+
+
 def _lane_signature(lane, big_works) -> tuple:
     """Structural identity of one lane's packed payload: the entry
     list's (work identity, block range) sequence. Payload content is a
@@ -149,15 +250,21 @@ def _lane_pids(lane, big_works) -> set:
     return pids
 
 
-def apply_delta(store: GraphStore, delta: GraphDelta) -> DeltaApplyResult:
-    """Apply a :class:`GraphDelta` to a prepared store incrementally.
+def splice_delta(store: GraphStore, delta: GraphDelta, *,
+                 bulk_threshold=BULK_THRESHOLD) -> DeltaApplyResult:
+    """Steps 1–3 + 5 of the apply: merge the delta into the dirty
+    segments (splice or bulk-sort path by dirty fraction), build the
+    derived store, chain the fingerprint. Plan rebuild (step 4) is NOT
+    done here — call :func:`rebuild_plans` against the base afterwards,
+    or use :func:`apply_delta` which composes both.
 
-    Returns a :class:`DeltaApplyResult` whose ``store`` is a NEW
-    derived :class:`GraphStore` (the base is left untouched as the old
-    snapshot) and whose ``stats`` record exactly what was reused:
-    blockings and per-partition stats of clean partitions, and — for
-    every plan cached on the base — the packed device payloads of lanes
-    whose structure survived re-scheduling.
+    Split out so the control plane's process pool can run the
+    numpy-heavy merge in a worker (the derived store pickles) while the
+    parent, which owns the base store's plan cache and device-resident
+    payloads, rebuilds plans in-process.
+
+    ``bulk_threshold=None`` forces the splice path regardless of dirty
+    fraction (parity tests pin one path against the other).
     """
     t0 = time.perf_counter()
     base_fp = store.fingerprint()
@@ -182,6 +289,17 @@ def apply_delta(store: GraphStore, delta: GraphDelta) -> DeltaApplyResult:
 
     # -- 2./3. merge dirty segments, splice, recompute dirty stats -----
     num_parts = len(store.infos)
+    dirty_fraction = (len(dirty_set) / num_parts) if num_parts else 0.0
+    use_bulk = (bulk_threshold is not None and dirty_set
+                and dirty_fraction >= bulk_threshold)
+    if use_bulk:
+        bulk_segs = _merge_dirty_bulk(
+            store, [int(p) for p in dirty],
+            (a_src, a_dst,
+             delta.add_weights if weighted and delta.num_adds else None),
+            (r_src, r_dst, r_pid),
+            (u_src, u_dst, delta.update_weights, u_pid),
+            weighted)
     seg_src: List[np.ndarray] = []
     seg_dst: List[np.ndarray] = []
     seg_w: List[np.ndarray] = []
@@ -191,17 +309,20 @@ def apply_delta(store: GraphStore, delta: GraphDelta) -> DeltaApplyResult:
         info = store.infos[p]
         lo, hi = info.edge_lo, info.edge_hi
         if p in dirty_set:
-            m_a, m_r, m_u = a_pid == p, r_pid == p, u_pid == p
-            s, d, w = _merge_segment(
-                store,
-                store.edges["src"][lo:hi], store.edges["dst"][lo:hi],
-                store.edges["weights"][lo:hi],
-                (a_src[m_a], a_dst[m_a],
-                 delta.add_weights[m_a] if weighted and delta.num_adds
-                 else None),
-                (r_src[m_r], r_dst[m_r]),
-                (u_src[m_u], u_dst[m_u], delta.update_weights[m_u]),
-                weighted)
+            if use_bulk:
+                s, d, w = bulk_segs[p]
+            else:
+                m_a, m_r, m_u = a_pid == p, r_pid == p, u_pid == p
+                s, d, w = _merge_segment(
+                    store,
+                    store.edges["src"][lo:hi], store.edges["dst"][lo:hi],
+                    store.edges["weights"][lo:hi],
+                    (a_src[m_a], a_dst[m_a],
+                     delta.add_weights[m_a] if weighted and delta.num_adds
+                     else None),
+                    (r_src[m_r], r_dst[m_r]),
+                    (u_src[m_u], u_dst[m_u], delta.update_weights[m_u]),
+                    weighted)
             new_infos.append(part.partition_info(p, s, d, off, V,
                                                  store.geom))
         else:
@@ -252,10 +373,40 @@ def apply_delta(store: GraphStore, delta: GraphDelta) -> DeltaApplyResult:
         little_cache=little_carried, big_cache=big_carried,
         fingerprint=new_fp, t_partition=t_splice)
 
-    # -- 4. rebuild cached plans; carry packed payloads of clean lanes --
+    stats = {
+        "num_adds": delta.num_adds,
+        "num_removes": delta.num_removes,
+        "num_updates": delta.num_updates,
+        "partitions": num_parts,
+        "dirty_partitions": len(dirty_set),
+        "dirty_fraction": dirty_fraction,
+        "path": "bulk_sort" if use_bulk else "splice",
+        "little_blockings_reused": len(little_carried),
+        "little_blockings_dropped": n_little_base - len(little_carried),
+        "big_blockings_reused": len(big_carried),
+        "big_blockings_dropped": n_big_base - len(big_carried),
+        "t_splice_ms": t_splice * 1e3,
+    }
+    return DeltaApplyResult(store=new_store, fingerprint=new_fp,
+                            base_fingerprint=base_fp,
+                            dirty_pids=tuple(int(p) for p in dirty),
+                            stats=stats)
+
+
+def rebuild_plans(base_store: GraphStore, new_store: GraphStore,
+                  dirty_pids) -> dict:
+    """Step 4 of the apply: rebuild every plan cached on ``base_store``
+    against ``new_store``'s stats, seeding structurally-unchanged clean
+    lanes with the pre-delta packed device payloads (and, for sharded
+    forms, pinning clean lanes to their owner devices). Runs in the
+    process that owns the base store's plan cache — the device payloads
+    it carries over never cross a process boundary. Returns the
+    plan-side stats dict that :func:`apply_delta` merges into
+    :attr:`DeltaApplyResult.stats`."""
+    dirty_set = set(int(p) for p in dirty_pids)
     t1 = time.perf_counter()
-    with store._plan_lock:
-        old_bundles = list(store._plan_cache.values())
+    with base_store._plan_lock:
+        old_bundles = list(base_store._plan_cache.values())
     plans_rebuilt = 0
     packed_reused = packed_repacked = 0
     packed_bytes_reused = 0
@@ -311,16 +462,7 @@ def apply_delta(store: GraphStore, delta: GraphDelta) -> DeltaApplyResult:
             shard_bytes_reused += new_sh.bytes_reused
     t_replan = time.perf_counter() - t1
 
-    stats = {
-        "num_adds": delta.num_adds,
-        "num_removes": delta.num_removes,
-        "num_updates": delta.num_updates,
-        "partitions": num_parts,
-        "dirty_partitions": len(dirty_set),
-        "little_blockings_reused": len(little_carried),
-        "little_blockings_dropped": n_little_base - len(little_carried),
-        "big_blockings_reused": len(big_carried),
-        "big_blockings_dropped": n_big_base - len(big_carried),
+    return {
         "plans_rebuilt": plans_rebuilt,
         "packed_lanes_reused": packed_reused,
         "packed_lanes_repacked": packed_repacked,
@@ -329,11 +471,25 @@ def apply_delta(store: GraphStore, delta: GraphDelta) -> DeltaApplyResult:
         "shard_bytes_moved": int(shard_bytes_moved),
         "shards_reused": shards_reused,
         "shard_bytes_reused": int(shard_bytes_reused),
-        "t_splice_ms": t_splice * 1e3,
         "t_replan_ms": t_replan * 1e3,
-        "t_apply_ms": (time.perf_counter() - t0) * 1e3,
     }
-    return DeltaApplyResult(store=new_store, fingerprint=new_fp,
-                            base_fingerprint=base_fp,
-                            dirty_pids=tuple(int(p) for p in dirty),
-                            stats=stats)
+
+
+def apply_delta(store: GraphStore, delta: GraphDelta, *,
+                bulk_threshold=BULK_THRESHOLD) -> DeltaApplyResult:
+    """Apply a :class:`GraphDelta` to a prepared store incrementally.
+
+    Returns a :class:`DeltaApplyResult` whose ``store`` is a NEW
+    derived :class:`GraphStore` (the base is left untouched as the old
+    snapshot) and whose ``stats`` record the merge path taken
+    (``"splice"`` vs ``"bulk_sort"``, by dirty fraction against
+    ``bulk_threshold``) and exactly what was reused: blockings and
+    per-partition stats of clean partitions, and — for every plan
+    cached on the base — the packed device payloads of lanes whose
+    structure survived re-scheduling.
+    """
+    t0 = time.perf_counter()
+    res = splice_delta(store, delta, bulk_threshold=bulk_threshold)
+    res.stats.update(rebuild_plans(store, res.store, res.dirty_pids))
+    res.stats["t_apply_ms"] = (time.perf_counter() - t0) * 1e3
+    return res
