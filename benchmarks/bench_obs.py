@@ -1,0 +1,127 @@
+"""Tracing overhead gate — tracing-off vs tracing-on end-to-end runs.
+
+The obs instrumentation is unconditional in library code (store,
+planner, executor call ``obs.span`` on every build/iteration), so its
+cost must be provably negligible in BOTH states:
+
+  * **off** — no tracer bound to the thread: every ``obs.span`` call is
+    one thread-local lookup returning the shared no-op. This is the
+    production default and the state the ≤5% p50 gate protects.
+  * **coarse** — tracer active, ``lane_detail=False``: real spans for
+    store/plan/iteration but the fused single-jit iteration keeps
+    running (no extra dispatches).
+  * **lane** — tracer active with per-lane detail: the executor
+    switches to per-lane jits + one merge/apply jit for per-lane
+    timing visibility. Extra dispatch boundaries per iteration are the
+    price of the calibration data; reported, and gated only loosely
+    (it is an opt-out knob, not the default cost).
+
+All three variants run INTERLEAVED (A/B/C per round) on warmed
+executors over the same cached plan, so host drift cancels out of the
+comparison. Results go to stdout as usual AND to ``BENCH_obs.json``.
+The hard gate: tracing-on (coarse) p50 within 5% of tracing-off p50.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro import api
+from repro.graphs import datasets
+from repro.obs import Tracer
+
+from .common import GEOM, emit, store_for
+
+# coarse spans must be invisible at request granularity
+GATE_COARSE = 1.05
+# per-lane detail pays real dispatches; keep it bounded, not invisible
+GATE_LANE = 1.50
+
+
+def _run_off(compiled, iters):
+    t0 = time.perf_counter()
+    compiled.run(max_iters=iters)
+    return time.perf_counter() - t0
+
+
+def _run_traced(compiled, tracer, iters):
+    root = tracer.start_trace("bench")
+    with tracer.activate(root.context):
+        t0 = time.perf_counter()
+        compiled.run(max_iters=iters)
+        dt = time.perf_counter() - t0
+    root.end()
+    return dt
+
+
+def run(graphs=None, rounds=15, iters=2, out_json="BENCH_obs.json"):
+    graphs = graphs or ["ggs"]
+    records = []
+    worst_coarse = worst_lane = 0.0
+    for name in graphs:
+        g = datasets.load(name)
+        store = store_for(g)
+        # three executors over the SAME cached plan: the comparison is
+        # about the run path, not plan/build work
+        c_off = api.compile(None, "pagerank", store=store, n_lanes=4)
+        c_coarse = api.compile(None, "pagerank", store=store, n_lanes=4)
+        c_lane = api.compile(None, "pagerank", store=store, n_lanes=4)
+        tr_coarse = Tracer(lane_detail=False)
+        tr_lane = Tracer(lane_detail=True)
+        # warm every path (compiles its jits) before any timed round
+        _run_off(c_off, iters)
+        _run_traced(c_coarse, tr_coarse, iters)
+        _run_traced(c_lane, tr_lane, iters)
+        ts = {"off": [], "coarse": [], "lane": []}
+        for _ in range(rounds):
+            ts["off"].append(_run_off(c_off, iters))
+            ts["coarse"].append(_run_traced(c_coarse, tr_coarse, iters))
+            ts["lane"].append(_run_traced(c_lane, tr_lane, iters))
+        p50 = {k: float(np.median(v)) for k, v in ts.items()}
+        ratio_coarse = p50["coarse"] / max(p50["off"], 1e-12)
+        ratio_lane = p50["lane"] / max(p50["off"], 1e-12)
+        worst_coarse = max(worst_coarse, ratio_coarse)
+        worst_lane = max(worst_lane, ratio_lane)
+        spans_per_run = (len(tr_lane.export(tr_lane.trace_ids()[-1]))
+                         if tr_lane.trace_ids() else 0)
+        drift = c_lane.executor.stats()["drift"]
+        rec = {
+            "graph": name, "V": g.num_vertices, "E": g.num_edges,
+            "n_lanes": 4, "iters_per_run": iters, "rounds": rounds,
+            "p50_off_s": p50["off"], "p50_coarse_s": p50["coarse"],
+            "p50_lane_s": p50["lane"],
+            "overhead_coarse": ratio_coarse, "overhead_lane": ratio_lane,
+            "spans_per_lane_run": spans_per_run,
+            "drift_kinds": {k: {"n": r["n"], "ratio": r["ratio"]}
+                            for k, r in drift.items()},
+        }
+        records.append(rec)
+        emit(f"obs.{name}.off", p50["off"] * 1e6, "tracing off (no-op)")
+        emit(f"obs.{name}.coarse", p50["coarse"] * 1e6,
+             f"overhead={100 * (ratio_coarse - 1):+.1f}% "
+             f"(gate <= {100 * (GATE_COARSE - 1):.0f}%)")
+        emit(f"obs.{name}.lane", p50["lane"] * 1e6,
+             f"overhead={100 * (ratio_lane - 1):+.1f}% "
+             f"spans/run={spans_per_run}")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"benchmark": "tracing_overhead",
+                       "gate_coarse": GATE_COARSE, "gate_lane": GATE_LANE,
+                       "records": records}, f, indent=2)
+        emit("obs.artifact", 0.0, out_json)
+    assert worst_coarse <= GATE_COARSE, (
+        f"tracing-on (coarse) p50 regression {100 * (worst_coarse - 1):.1f}%"
+        f" exceeds the {100 * (GATE_COARSE - 1):.0f}% gate")
+    assert worst_lane <= GATE_LANE, (
+        f"per-lane tracing p50 regression {100 * (worst_lane - 1):.1f}% "
+        f"exceeds the {100 * (GATE_LANE - 1):.0f}% bound")
+    emit("obs.gate", 0.0,
+         f"pass coarse={100 * (worst_coarse - 1):+.1f}% "
+         f"lane={100 * (worst_lane - 1):+.1f}%")
+    return records
+
+
+if __name__ == "__main__":
+    run()

@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV lines (see benchmarks/common.emit).
   —        bench_streaming      delta apply vs full rebuild (+ JSON)
   —        bench_sharding       sharded vs single-device fused (+ JSON)
   —        bench_control_plane  p99 update latency, threads vs pool (+ JSON)
+  —        bench_obs            tracing-off vs tracing-on overhead (+ JSON)
 """
 from __future__ import annotations
 
@@ -24,7 +25,7 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: pipelines,heterogeneity,scalability,"
                          "preprocessing,amortization,sota,roofline,serving,"
-                         "fused,streaming,sharding,control_plane")
+                         "fused,streaming,sharding,control_plane,obs")
     ap.add_argument("--quick", action="store_true",
                     help="smaller graph set (CI-speed)")
     ap.add_argument("--smoke", action="store_true",
@@ -36,9 +37,9 @@ def main() -> None:
             else set(args.only.split(",")))
 
     from . import (bench_control_plane, bench_fused, bench_heterogeneity,
-                   bench_pipelines, bench_preprocessing, bench_roofline,
-                   bench_scalability, bench_serving, bench_sharding,
-                   bench_sota, bench_streaming)
+                   bench_obs, bench_pipelines, bench_preprocessing,
+                   bench_roofline, bench_scalability, bench_serving,
+                   bench_sharding, bench_sota, bench_streaming)
 
     suites = [
         ("pipelines", lambda: bench_pipelines.run(
@@ -87,6 +88,11 @@ def main() -> None:
         # (JSON + Prometheus text) as artifacts
         ("control_plane", lambda: bench_control_plane.run(
             smoke=args.quick)),
+        # gates the unconditional obs instrumentation: tracing-on
+        # (coarse) p50 within 5% of tracing-off at every tier
+        ("obs", lambda: bench_obs.run(
+            graphs=["ggs"] if args.quick else ["ggs", "hws"],
+            rounds=9 if args.smoke else 15)),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

@@ -1,7 +1,8 @@
 """Control-plane demo: a GraphService with the process-pool worker
 tier, multi-tenant admission, priority/deadline scheduling, and the
 HTTP job API — submit over HTTP, watch a job run to completion, stream
-an update, read Prometheus metrics.
+an update, read Prometheus metrics, and dump the job's end-to-end
+trace (open ``trace.json`` at https://ui.perfetto.dev).
 
     PYTHONPATH=src python examples/control_plane.py
 """
@@ -42,7 +43,9 @@ def main():
                           default_quota=api.TenantQuota(rate=2.0,
                                                         burst=4)
                           ) as svc:
-        fp = svc.register(g)
+        # prepare=False: the store builds inside the first job (in a
+        # pool worker), so its trace shows the whole cold path
+        fp = svc.register(g, prepare=False)
         plane = api.ControlPlane(svc)
         server, base = api.serve_jobs(plane)
         print(f"job API listening on {base}")
@@ -97,6 +100,23 @@ def main():
         for line in prom.splitlines():
             if line.startswith(wanted):
                 print(f"  {line}")
+
+        # -- the first job's end-to-end trace -----------------------------
+        # every span of its path — HTTP submit, queue wait, pool-worker
+        # store build, plan, per-lane execution, merge/apply — in Chrome
+        # trace-event JSON (chrome://tracing or ui.perfetto.dev)
+        _, trace = http("GET", f"{base}/jobs/{jid}/trace")
+        with open("trace.json", "w") as f:
+            json.dump(trace, f, indent=1)
+        events = trace["traceEvents"]
+        print(f"GET /jobs/{jid[:8]}…/trace -> {len(events)} spans "
+              f"-> trace.json")
+        print("top-3 slowest spans:")
+        for ev in sorted(events, key=lambda e: -e["dur"])[:3]:
+            print(f"  {ev['dur'] / 1e3:8.1f} ms  {ev['name']}"
+                  + (f"  (lane {ev['args']['lane']},"
+                     f" {ev['args']['kind']})"
+                     if ev["name"] == "executor.lane" else ""))
 
         server.shutdown()
 

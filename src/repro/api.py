@@ -50,6 +50,12 @@ records over an HTTP JSON API::
     plane = api.ControlPlane(svc, job_store=api.JobStore("jobs.jsonl"))
     server, url = api.serve_jobs(plane)        # POST {url}/jobs, ...
 
+Every job carries an end-to-end trace (:class:`Tracer`): spans cross
+the scheduler queue and the worker-process boundary, per-lane spans
+record measured-vs-estimated drift against the perf model, and
+``GET {url}/jobs/{id}/trace`` returns Chrome-trace JSON for Perfetto
+(see docs/OBSERVABILITY.md).
+
 docs/ARCHITECTURE.md maps the whole system.
 """
 from __future__ import annotations
@@ -69,6 +75,7 @@ from .core.planner import PlanBundle, PlanConfig, Planner
 from .core.store import GraphStore
 from .core.types import Geometry, SchedulePlan
 from .graphs.formats import Graph, fingerprint as graph_fingerprint
+from .obs import DriftAccumulator, Span, SpanContext, Tracer
 from .serve_graph import (GraphService, GraphStoreCache, RequestHandle,
                           ServiceMetrics, UpdateResult)
 from .sharding import (LanePlacement, ShardedExecutor, ShardedLanes,
@@ -79,13 +86,14 @@ from .streaming import (GraphDelta, apply_delta, apply_delta_to_graph,
 
 __all__ = [
     "BUILTIN_APPS", "CompiledApp", "ControlPlane", "DeadlineExpired",
-    "Executor", "GASApp", "Geometry", "GraphDelta", "GraphService",
-    "GraphStore", "GraphStoreCache", "HW", "JobRecord", "JobScheduler",
-    "JobStore", "LanePlacement", "PlanBundle", "PlanConfig", "Planner",
-    "QueueFull", "QuotaExceeded", "RejectedJob", "RequestHandle",
-    "SchedulePlan", "ServiceMetrics", "ShardedExecutor", "ShardedLanes",
-    "TPU_V5E", "TPU_V5E_SCALED", "TenantQuota", "UpdateResult",
-    "WorkerCrashed", "WorkerPool", "apply_delta", "apply_delta_to_graph",
+    "DriftAccumulator", "Executor", "GASApp", "Geometry", "GraphDelta",
+    "GraphService", "GraphStore", "GraphStoreCache", "HW", "JobRecord",
+    "JobScheduler", "JobStore", "LanePlacement", "PlanBundle",
+    "PlanConfig", "Planner", "QueueFull", "QuotaExceeded", "RejectedJob",
+    "RequestHandle", "SchedulePlan", "ServiceMetrics", "ShardedExecutor",
+    "ShardedLanes", "Span", "SpanContext", "TPU_V5E", "TPU_V5E_SCALED",
+    "TenantQuota", "Tracer", "UpdateResult", "WorkerCrashed",
+    "WorkerPool", "apply_delta", "apply_delta_to_graph",
     "chain_fingerprint", "compile", "graph_fingerprint", "make_bfs",
     "make_closeness", "make_delta", "make_pagerank", "make_sssp",
     "make_wcc", "place_lanes", "random_delta", "rebuild_plans",

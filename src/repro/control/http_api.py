@@ -20,6 +20,9 @@ Endpoints (all JSON unless noted):
   transfer-encoding** log stream: each chunk is a JSON line batch;
   with ``follow=1`` the connection stays open until the job is
   terminal and the reader has caught up.
+* ``GET /jobs/{id}/trace`` — the job's distributed trace as
+  Chrome-trace JSON (open in ``chrome://tracing`` / Perfetto); 404
+  until the job has a trace or after the tracer evicted it.
 * ``POST /jobs/{id}/cancel`` — cancel a queued job.
 * ``GET /metrics`` — Prometheus text; ``GET /metrics.json`` — the full
   merged snapshot. ``GET /healthz`` — liveness.
@@ -41,7 +44,7 @@ from .scheduler import QueueFull, QuotaExceeded, RejectedJob
 
 __all__ = ["serve_jobs"]
 
-_JOB_PATH = re.compile(r"^/jobs/([^/]+)(/logs|/result|/cancel)?$")
+_JOB_PATH = re.compile(r"^/jobs/([^/]+)(/logs|/result|/cancel|/trace)?$")
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -94,7 +97,7 @@ class _Handler(BaseHTTPRequestHandler):
                 return self._json(200, {"jobs": self.plane.jobs.list(
                     tenant=q.get("tenant"), state=q.get("state"))})
             m = _JOB_PATH.match(url.path)
-            if m and m.group(2) in (None, "/logs", "/result"):
+            if m and m.group(2) in (None, "/logs", "/result", "/trace"):
                 jid, sub = m.group(1), m.group(2)
                 if sub == "/logs":
                     return self._stream_logs(jid,
@@ -102,6 +105,12 @@ class _Handler(BaseHTTPRequestHandler):
                                              q.get("follow") == "1")
                 if sub == "/result":
                     return self._result(jid, q.get("timeout"))
+                if sub == "/trace":
+                    trace = self.plane.trace(jid)
+                    if trace is None:
+                        return self._json(404, {"error": "no_trace",
+                                                "job_id": jid})
+                    return self._json(200, trace)
                 rec = self.plane.jobs.get(jid)
                 if rec is None:
                     return self._json(404, {"error": "not_found",

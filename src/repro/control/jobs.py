@@ -55,7 +55,7 @@ class JobRecord:
 
     __slots__ = ("id", "kind", "tenant", "priority", "deadline", "app",
                  "fingerprint", "state", "error", "coalesced",
-                 "timestamps", "metrics", "logs")
+                 "timestamps", "metrics", "logs", "trace_id")
 
     def __init__(self, id: str, kind: str, tenant: str, priority: int,
                  deadline: Optional[float], app: str,
@@ -75,6 +75,7 @@ class JobRecord:
             JobState.SUBMITTED: time.time()}
         self.metrics: Optional[dict] = None
         self.logs: Deque[str] = deque(maxlen=log_lines)
+        self.trace_id: Optional[str] = None
 
     def to_dict(self, with_logs: bool = False) -> dict:
         d = {
@@ -82,7 +83,7 @@ class JobRecord:
             "priority": self.priority, "deadline": self.deadline,
             "app": self.app, "fingerprint": self.fingerprint,
             "state": self.state, "error": self.error,
-            "coalesced": self.coalesced,
+            "coalesced": self.coalesced, "trace_id": self.trace_id,
             "timestamps": dict(self.timestamps),
             "metrics": self.metrics,
             "terminal": self.state in JobState.TERMINAL,
@@ -168,6 +169,17 @@ class JobStore:
         if persist is not None:
             self._persist(persist)
         return rec
+
+    def set_trace(self, job_id: str, trace_id: Optional[str]) -> None:
+        """Attach the distributed-trace id once the service hands the
+        submission's context back (coalesced jobs get the id of the
+        in-flight job they merged into)."""
+        if trace_id is None:
+            return
+        with self._lock:
+            rec = self._records.get(job_id)
+            if rec is not None:
+                rec.trace_id = trace_id
 
     def mark_coalesced(self, job_id: str) -> None:
         with self._lock:

@@ -12,9 +12,12 @@ constructed from kwargs (owned, closed with the plane).
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, Optional
 
+from .. import obs
 from ..graphs.formats import Graph
+from ..serve_graph.metrics import merge_expositions
 from ..serve_graph.service import GraphService, RequestHandle
 from ..streaming import GraphDelta
 from .jobs import JobRecord, JobState, JobStore
@@ -43,12 +46,22 @@ class ControlPlane:
         None builds one from ``service_kwargs`` (owned).
     jobs: a :class:`JobStore` (e.g. with ``persist_path`` set); None
         builds a default one.
+    tracer: the :class:`~repro.obs.Tracer` for end-to-end job traces.
+        None reuses the service's tracer, or installs a fresh one on a
+        service that has none — the plane always traces, so
+        ``GET /jobs/{id}/trace`` works out of the box.
     """
 
     def __init__(self, service: Optional[GraphService] = None, *,
-                 jobs: Optional[JobStore] = None, **service_kwargs):
+                 jobs: Optional[JobStore] = None,
+                 tracer: Optional[obs.Tracer] = None, **service_kwargs):
         self._owns_service = service is None
+        if service is None and tracer is not None:
+            service_kwargs.setdefault("tracer", tracer)
         self.service = service or GraphService(**service_kwargs)
+        if self.service.tracer is None:
+            self.service.tracer = tracer or obs.Tracer()
+        self.tracer = self.service.tracer
         self.jobs = jobs or JobStore()
         self._lock = threading.Lock()
         self._handles: Dict[str, RequestHandle] = {}
@@ -82,6 +95,7 @@ class ControlPlane:
         rejections and bad requests still raise (typed), but the
         record survives in state ``rejected``/``failed`` so the
         refusal is queryable afterwards."""
+        t_submit = time.time()
         rec = self.jobs.create(
             kind="run", tenant=tenant, priority=priority,
             deadline=deadline, app=app if isinstance(app, str) else app.name,
@@ -121,6 +135,12 @@ class ControlPlane:
         except Exception as exc:
             self.jobs.transition(jid, JobState.FAILED, error=str(exc))
             raise
+        ctx = getattr(handle, "trace_ctx", None)
+        if ctx is not None:
+            self.jobs.set_trace(jid, ctx.trace_id)
+            # backdated so the span covers record creation + admission
+            self.tracer.start_span("control.submit", "control", parent=ctx,
+                                   t_start=t_submit, job_id=jid).end()
         with self._lock:
             self._handles[jid] = handle
         handle_stored.set()
@@ -173,6 +193,7 @@ class ControlPlane:
         except Exception as exc:
             self.jobs.transition(rec.id, JobState.FAILED, error=str(exc))
             raise
+        self.jobs.set_trace(rec.id, res.trace_id)
         self.jobs.transition(
             rec.id, JobState.DONE,
             metrics={"fingerprint": res.fingerprint, "mode": res.mode,
@@ -189,31 +210,46 @@ class ControlPlane:
         snap["jobs"] = self.jobs.stats()
         return snap
 
+    def trace(self, job_id: str) -> Optional[dict]:
+        """The job's distributed trace as a Chrome-trace dict (load it
+        at ``chrome://tracing`` or https://ui.perfetto.dev), or None if
+        the job is unknown, predates tracing, or its trace was evicted
+        from the tracer's bounded ring."""
+        rec = self.jobs.get(job_id)
+        if rec is None or rec.trace_id is None:
+            return None
+        if rec.trace_id not in self.tracer.trace_ids():
+            return None
+        return self.tracer.to_chrome_trace(trace_id=rec.trace_id)
+
     def prometheus(self) -> str:
-        """Service metrics in Prometheus text form, with control-plane
-        gauges (scheduler depth, pool and job-store state) appended."""
-        out = [self.service.metrics.render_prometheus()]
+        """Service metrics in Prometheus text form, merged with the
+        control-plane gauges (scheduler depth, pool and job-store
+        state) into one exposition — families are deduped so a scraper
+        never sees a repeated HELP/TYPE header."""
         sched = self.service._scheduler.stats()
-        out.append("# HELP regraph_scheduler_depth Queued jobs.\n"
-                   "# TYPE regraph_scheduler_depth gauge\n"
-                   f"regraph_scheduler_depth {sched['depth']}\n")
+        blocks = [self.service.metrics.render_prometheus(),
+                  "# HELP regraph_scheduler_depth Queued jobs.\n"
+                  "# TYPE regraph_scheduler_depth gauge\n"
+                  f"regraph_scheduler_depth {sched['depth']}\n"]
         pool = self.service._pool
         if pool is not None:
             p = pool.stats()
-            out.append("# HELP regraph_pool_jobs_total Jobs run in the "
-                       "process pool.\n"
-                       "# TYPE regraph_pool_jobs_total counter\n"
-                       f"regraph_pool_jobs_total {p['jobs']}\n"
-                       "# HELP regraph_pool_crashes_total Worker process "
-                       "crashes.\n"
-                       "# TYPE regraph_pool_crashes_total counter\n"
-                       f"regraph_pool_crashes_total {p['crashes']}\n")
+            blocks.append("# HELP regraph_pool_jobs_total Jobs run in "
+                          "the process pool.\n"
+                          "# TYPE regraph_pool_jobs_total counter\n"
+                          f"regraph_pool_jobs_total {p['jobs']}\n"
+                          "# HELP regraph_pool_crashes_total Worker "
+                          "process crashes.\n"
+                          "# TYPE regraph_pool_crashes_total counter\n"
+                          f"regraph_pool_crashes_total {p['crashes']}\n")
         j = self.jobs.stats()
-        out.append("# HELP regraph_jobs Jobs by lifecycle state.\n"
-                   "# TYPE regraph_jobs gauge")
+        job_lines = ["# HELP regraph_jobs Jobs by lifecycle state.",
+                     "# TYPE regraph_jobs gauge"]
         for state, n in sorted(j["by_state"].items()):
-            out.append(f'regraph_jobs{{state="{state}"}} {n}')
-        return "\n".join(out) + "\n"
+            job_lines.append(f'regraph_jobs{{state="{state}"}} {n}')
+        blocks.append("\n".join(job_lines) + "\n")
+        return merge_expositions(*blocks)
 
     # -- HTTP -----------------------------------------------------------
     def serve_http(self, host: str = "127.0.0.1", port: int = 0):

@@ -102,29 +102,62 @@ def _w_crash() -> None:
     os._exit(13)
 
 
+def _w_traced(root_name: str, fn):
+    """Run ``fn`` under a throwaway worker-local tracer and return
+    ``(result, ended spans as dicts)`` — the trace carrier across the
+    pickled process boundary. Span ids are uuid-based (collision-free
+    across processes) and starts are epoch time, so the parent's
+    :meth:`~repro.obs.Tracer.adopt` can splice them straight into the
+    submitting job's trace."""
+    import os
+
+    from ..obs import Tracer
+    tracer = Tracer()
+    root = tracer.start_trace(root_name, "pool-worker", pid=os.getpid())
+    try:
+        with tracer.activate(root.context):
+            result = fn()
+    finally:
+        root.end()
+    return result, tracer.export(root.trace_id)
+
+
 def _w_build_store(graph: Graph, geom: Geometry, use_dbg: bool,
                    fp: Optional[str], max_plans: Optional[int],
-                   crash: bool = False) -> GraphStore:
+                   crash: bool = False, trace: bool = False):
     if crash:
         _w_crash()
-    store = GraphStore(graph, geom=geom, use_dbg=use_dbg,
-                       max_plans=max_plans, fingerprint=fp)
-    _w_cache_put((store.fingerprint(), geom, use_dbg), store)
-    return store
+
+    def build() -> GraphStore:
+        store = GraphStore(graph, geom=geom, use_dbg=use_dbg,
+                           max_plans=max_plans, fingerprint=fp)
+        _w_cache_put((store.fingerprint(), geom, use_dbg), store)
+        return store
+
+    if trace:
+        return _w_traced("pool.worker.build", build)
+    return build()
 
 
 def _w_apply_delta(key: tuple, delta: GraphDelta, bulk_threshold,
                    base_store: Optional[GraphStore],
-                   crash: bool = False):
+                   crash: bool = False, trace: bool = False):
     if crash:
         _w_crash()
     store = base_store if base_store is not None else _STORE_CACHE.get(key)
     if store is None:
-        return "need_state", None
-    res = splice_delta(store, delta, bulk_threshold=bulk_threshold)
-    _w_cache_put(key, store)                       # base stays reusable
-    _w_cache_put((res.fingerprint, key[1], key[2]), res.store)
-    return "ok", res
+        return ("need_state", None, []) if trace else ("need_state", None)
+
+    def apply() -> DeltaApplyResult:
+        res = splice_delta(store, delta, bulk_threshold=bulk_threshold)
+        _w_cache_put(key, store)                   # base stays reusable
+        _w_cache_put((res.fingerprint, key[1], key[2]), res.store)
+        return res
+
+    if trace:
+        res, spans = _w_traced("pool.worker.apply", apply)
+        return "ok", res, spans
+    return "ok", apply()
 
 
 # ---------------------------------------------------------------------
@@ -203,36 +236,47 @@ class WorkerPool:
     def build_store(self, graph: Graph, *, geom: Geometry, use_dbg: bool,
                     fp: Optional[str] = None,
                     max_plans: Optional[int] = None,
-                    _crash: bool = False) -> GraphStore:
+                    _crash: bool = False, trace: bool = False):
         """Build a GraphStore in a build-lane worker process (the
         least-loaded one). The returned store has no plans and no locks
         attached (see ``GraphStore.__getstate__``); the parent plans on
-        it lazily as usual."""
+        it lazily as usual. With ``trace=True`` the worker records its
+        build stages into a local tracer and the call returns
+        ``(store, span dicts)`` for the parent to
+        :meth:`~repro.obs.Tracer.adopt`."""
         with self._lock:
             idx = min(self._build_lanes, key=lambda i: self._inflight[i])
         return self._run(idx, _w_build_store, graph, geom, use_dbg, fp,
-                         max_plans, _crash)
+                         max_plans, _crash, trace)
 
     def apply(self, store: GraphStore, delta: GraphDelta, *,
               bulk_threshold=BULK_THRESHOLD,
-              _crash: bool = False) -> DeltaApplyResult:
+              _crash: bool = False, trace: bool = False):
         """Splice ``delta`` against ``store`` in the apply-lane worker
         and return the splice-only result (no plans rebuilt — run
         :func:`repro.streaming.rebuild_plans` in the parent). The lane
         never queues behind builds, and holds each snapshot chain in
         its cache: the first touch of a lineage ships the pickled base
-        once, every later delta travels alone."""
+        once, every later delta travels alone. With ``trace=True``
+        returns ``(result, span dicts)`` — spans from BOTH calls when a
+        ``need_state`` retry re-ships the base."""
         key = (store.fingerprint(), store.geom, store.use_dbg)
         idx = self._APPLY_LANE
-        status, res = self._run(idx, _w_apply_delta, key, delta,
-                                bulk_threshold, None, _crash)
+        out = self._run(idx, _w_apply_delta, key, delta,
+                        bulk_threshold, None, _crash, trace)
+        status, res, spans = out if trace else (*out, None)
         if status == "need_state":
             with self._lock:
                 self.need_state_retries += 1
-            status, res = self._run(idx, _w_apply_delta, key, delta,
-                                    bulk_threshold, store, _crash)
+            out = self._run(idx, _w_apply_delta, key, delta,
+                            bulk_threshold, store, _crash, trace)
+            if trace:
+                status, res, retry_spans = out
+                spans = list(spans) + list(retry_spans)
+            else:
+                status, res = out
         assert status == "ok"
-        return res
+        return (res, spans) if trace else res
 
     # -- lifecycle ------------------------------------------------------
     def close(self, wait: bool = True) -> None:

@@ -41,6 +41,7 @@ import heapq
 import math
 import threading
 import time
+from collections import deque
 from typing import Callable, Dict, Optional
 
 __all__ = ["JobScheduler", "TenantQuota", "RejectedJob", "QueueFull",
@@ -82,14 +83,18 @@ class TenantQuota:
 
 
 class _Entry:
-    __slots__ = ("key", "item", "tenant", "deadline", "valid")
+    __slots__ = ("key", "item", "tenant", "deadline", "valid", "t_push")
 
-    def __init__(self, key, item, tenant, deadline):
+    def __init__(self, key, item, tenant, deadline,
+                 t_push: Optional[float] = None):
         self.key = key
         self.item = item
         self.tenant = tenant
         self.deadline = deadline
         self.valid = True
+        # wall anchor for the queue-wait distribution (observability);
+        # reprioritized entries inherit it so the wait stays honest
+        self.t_push = time.perf_counter() if t_push is None else t_push
 
     def __lt__(self, other):        # heapq compares entries directly
         return self.key < other.key
@@ -134,6 +139,10 @@ class JobScheduler:
         self._depth_by_tenant: Dict[str, int] = {}
         self.pushed = self.popped = self.shed = 0
         self.rejected_full = self.rejected_quota = 0
+        # recent queue-wait samples (ms), popped and shed separately —
+        # shed waits are deadline-censored and would skew the pop p99
+        self._wait_ms: deque = deque(maxlen=2048)
+        self._shed_wait_ms: deque = deque(maxlen=512)
 
     # -- admission ------------------------------------------------------
     def _quota_for(self, tenant: str) -> Optional[TenantQuota]:
@@ -225,7 +234,7 @@ class JobScheduler:
                 return True
             e.valid = False
             ne = _Entry((-priority,) + e.key[1:], item, e.tenant,
-                        e.deadline)
+                        e.deadline, t_push=e.t_push)
             self._index[item] = ne
             heapq.heappush(self._heap, ne)
             self._cv.notify()
@@ -251,6 +260,8 @@ class JobScheduler:
                 self._index.pop(e.item, None)
                 self._depth_by_tenant[e.tenant] -= 1
                 self.shed += 1
+                self._shed_wait_ms.append(
+                    (time.perf_counter() - e.t_push) * 1e3)
                 shed_out.append(e.item)
                 continue
             heapq.heappop(self._heap)
@@ -259,6 +270,8 @@ class JobScheduler:
                 self._index.pop(e.item, None)
                 self._depth_by_tenant[e.tenant] -= 1
                 self.popped += 1
+                self._wait_ms.append(
+                    (time.perf_counter() - e.t_push) * 1e3)
             return True, e.item
         return False, None
 
@@ -297,8 +310,20 @@ class JobScheduler:
         with self._cv:
             return len(self._index)
 
+    @staticmethod
+    def _pct(xs, p: float) -> Optional[float]:
+        """Nearest-rank percentile of a sample sequence; None if empty."""
+        if not xs:
+            return None
+        xs = sorted(xs)
+        rank = max(0, min(len(xs) - 1,
+                          int(round(p / 100.0 * (len(xs) - 1)))))
+        return xs[rank]
+
     def stats(self) -> dict:
         with self._cv:
+            waits = list(self._wait_ms)
+            shed_waits = list(self._shed_wait_ms)
             return {
                 "depth": len(self._index),
                 "depth_by_tenant": {t: n for t, n
@@ -309,4 +334,10 @@ class JobScheduler:
                 "rejected_queue_full": self.rejected_full,
                 "rejected_quota": self.rejected_quota,
                 "max_depth": self.max_depth,
+                # queue-wait distribution over the recent sample window
+                # (popped jobs; shed waits reported separately — they
+                # are deadline-censored)
+                "queue_wait_p50_ms": self._pct(waits, 50),
+                "queue_wait_p99_ms": self._pct(waits, 99),
+                "shed_wait_p50_ms": self._pct(shed_waits, 50),
             }

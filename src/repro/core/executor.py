@@ -24,7 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..kernels import ops
+from . import perf_model
 from .gas import GASApp, GATHER_IDENTITY
 from .planner import PlanBundle
 
@@ -97,7 +99,8 @@ class Executor:
     """
 
     def __init__(self, store, bundle: PlanBundle, app: GASApp,
-                 path: Optional[str] = None, fuse_lanes: bool = True):
+                 path: Optional[str] = None, fuse_lanes: bool = True,
+                 drift_parent: Optional[obs.DriftAccumulator] = None):
         self.store = store
         self.bundle = bundle
         self.app = app
@@ -105,6 +108,10 @@ class Executor:
         self.path = path or ops.default_path()
         self.V_pad = store.V_pad
         self.fuse_lanes = bool(fuse_lanes)
+        # measured-vs-model drift; chains to the service-level
+        # accumulator when this executor runs under a GraphService
+        self.drift = obs.DriftAccumulator(parent=drift_parent)
+        self._lane_est = perf_model.lane_estimates(bundle.plan)
 
         t0 = time.perf_counter()
         # shared across every app on this plan (memoized on the bundle);
@@ -121,6 +128,7 @@ class Executor:
         self.aux = store.aux
         self._iter_fn = None
         self._lane_fns = None   # cached per-lane jits for time_lanes
+        self._traced_fns = None  # cached (lane fns, merge_apply) pair
 
     @property
     def plan(self):
@@ -174,17 +182,95 @@ class Executor:
     def init_props(self):
         return init_props(self.store, self.app)
 
+    def _build_traced_fns(self):
+        """Per-lane jitted fns returning the RAW (tiles, tile_idx)
+        outputs — no merge — plus ONE jitted merge+apply. Together they
+        run an iteration with per-lane timing visibility while keeping
+        the single-merge+apply program region of :meth:`_iteration_fn`
+        (the structure bit-identity depends on); only kernel-launch
+        granularity differs."""
+        lanes = (self.packed_lanes if self.fuse_lanes
+                 else self.bundle.lane_entries())
+        lane_fns = []
+        for lane in lanes:
+            if not lane:
+                lane_fns.append(None)
+                continue
+
+            def lane_fn(vp, lane=lane):
+                return [self._run_payload(p, vp) for p in lane]
+
+            lane_fns.append(jax.jit(lane_fn))
+
+        app, geom = self.app, self.geom
+        ident = GATHER_IDENTITY[app.gather]
+        dt = self.accum_dtype
+
+        def merge_apply(vprops, outs, aux, it):
+            accum = jnp.full((self.V_pad,), ident, dt)
+            accum = ops.merge_all(accum, outs, geom.T)
+            return app.apply(accum, vprops, aux, it)
+
+        return lane_fns, jax.jit(merge_apply)
+
+    def _run_iteration_traced(self, vprops, it):
+        """One iteration under an active tracer with lane detail: a span
+        per lane (carrying the model estimate, so every trace doubles as
+        a calibration sample), one for merge+apply, drift samples for
+        both levels."""
+        lane_fns, merge_apply = self._traced_fns
+        est = self._lane_est
+        with obs.span("executor.iteration", "executor", it=it):
+            outs = []
+            for li, f in enumerate(lane_fns):
+                if f is None:
+                    continue
+                e_i, kind_i = est[li] if li < len(est) else (0.0, "mixed")
+                t0 = time.perf_counter()
+                n_entries = (len(self.plan.lanes[li])
+                             if li < len(self.plan.lanes) else 0)
+                with obs.span("executor.lane", "executor", lane=li,
+                              kind=kind_i, est_time=e_i,
+                              n_entries=n_entries):
+                    lane_out = f(vprops)
+                    jax.block_until_ready(lane_out)
+                self.drift.add(kind_i, e_i, time.perf_counter() - t0)
+                outs.extend(lane_out)
+            with obs.span("executor.merge_apply", "executor", it=it):
+                new = merge_apply(vprops, outs, self.aux, it)
+                new.block_until_ready()
+        return new
+
     def run(self, max_iters: Optional[int] = None, collect_history=False):
-        """Run to convergence; returns props in ORIGINAL vertex ids."""
-        if self._iter_fn is None:
+        """Run to convergence; returns props in ORIGINAL vertex ids.
+
+        When a tracer with ``lane_detail`` is active on this thread, the
+        iteration switches to the traced per-lane path (extra dispatches
+        per iteration, bit-identical results — see
+        :meth:`_build_traced_fns`); otherwise the single fused jit runs
+        and only the per-iteration makespan drift sample is taken."""
+        tracer = obs.current_tracer()
+        lane_detail = (tracer is not None and tracer.lane_detail
+                       and obs.current_ctx() is not None)
+        if lane_detail:
+            if self._traced_fns is None:
+                self._traced_fns = self._build_traced_fns()
+        elif self._iter_fn is None:
             self._iter_fn = self._build_iteration()
         vprops = self.init_props()
         iters = max_iters or self.app.max_iters
+        est_makespan = self.plan.est_makespan
         history = []
         it_done = 0
         for it in range(iters):
-            new = self._iter_fn(vprops, self.aux, it)
-            new.block_until_ready()
+            t_it = time.perf_counter()
+            if lane_detail:
+                new = self._run_iteration_traced(vprops, it)
+            else:
+                new = self._iter_fn(vprops, self.aux, it)
+                new.block_until_ready()
+            self.drift.add("makespan", est_makespan,
+                           time.perf_counter() - t_it)
             it_done = it + 1
             if collect_history:
                 history.append(np.asarray(new))
@@ -240,7 +326,7 @@ class Executor:
             self._lane_fns = self._build_lane_fns()
         vprops = self.init_props()
         out = []
-        for f in self._lane_fns:
+        for i, f in enumerate(self._lane_fns):
             if f is None:
                 out.append(0.0)
                 continue
@@ -250,7 +336,12 @@ class Executor:
                 t0 = time.perf_counter()
                 f(vprops).block_until_ready()
                 ts.append(time.perf_counter() - t0)
-            out.append(float(np.median(ts)))
+            med = float(np.median(ts))
+            out.append(med)
+            # every calibration sweep is also a drift sample
+            if i < len(self._lane_est):
+                e_i, kind_i = self._lane_est[i]
+                self.drift.add(kind_i, e_i, med)
         return out
 
     # ------------------------------------------------------------------
@@ -313,5 +404,6 @@ class Executor:
             "num_padded_edges": padded_edges,
             "padding_efficiency": (real_edges / padded_edges
                                    if padded_edges else 1.0),
+            "drift": self.drift.report(),
             **self.dispatch_stats(),
         }

@@ -154,3 +154,24 @@ def calibrate(samples: Sequence[tuple], hw: HW) -> HW:
     return hw.clone(c_edges=c[0], c_edges_big=c[1], c_vertices=c[2],
                     c_compute=c[3], c_store=c[4],
                     t_const=float(max(coef[5], 0.0)), combine="sum")
+
+
+def lane_estimates(plan) -> List[tuple]:
+    """Per-lane ``(estimated_seconds, kind)`` for a SchedulePlan — the
+    model-side half of the obs drift report. A lane's estimate is the
+    sum of its entries' ``est_time`` (entries on one lane run serially);
+    ``kind`` is the shared entry kind, ``"mixed"`` when a lane runs both
+    pipelines (fewer lanes than pipeline classes), ``"idle"`` when the
+    lane got no work."""
+    out: List[tuple] = []
+    for lane in plan.lanes:
+        est = sum(e.est_time for e in lane)
+        kinds = {e.kind for e in lane}
+        if not kinds:
+            kind = "idle"
+        elif len(kinds) == 1:
+            kind = kinds.pop()
+        else:
+            kind = "mixed"
+        out.append((float(est), kind))
+    return out

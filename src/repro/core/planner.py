@@ -13,6 +13,7 @@ import threading
 import time
 from typing import Dict, List, Literal, Optional
 
+from .. import obs
 from . import perf_model, schedule
 from .types import BlockedEdges, PartitionInfo, SchedulePlan
 
@@ -176,9 +177,12 @@ class PlanBundle:
             if self._packed_lanes is None:
                 from ..kernels import ops
                 seed = self._packed_seed
-                self._packed_lanes = ops.pack_lanes(
-                    self.plan, self.little_works, self.big_works,
-                    reuse=seed)
+                with obs.span("plan.pack", "planner",
+                              lanes=len(self.plan.lanes),
+                              reused=len(seed) if seed else 0):
+                    self._packed_lanes = ops.pack_lanes(
+                        self.plan, self.little_works, self.big_works,
+                        reuse=seed)
                 if seed:
                     self.packed_lanes_reused = len(seed)
                     self.packed_bytes_reused = sum(
@@ -258,30 +262,37 @@ class Planner:
         t0 = time.perf_counter()
         t_block0 = store.t_block
 
-        infos = store.copy_infos()
-        perf_model.classify(infos, geom, cfg.hw)
-        if cfg.mode == "monolithic":
-            for i in infos:
-                i.is_dense = False
-        elif cfg.mode == "fixed":
-            if cfg.forced_little == 0:    # all work through Big pipelines
+        with obs.span("plan.classify", "planner", mode=cfg.mode) as sp:
+            infos = store.copy_infos()
+            perf_model.classify(infos, geom, cfg.hw)
+            if cfg.mode == "monolithic":
                 for i in infos:
                     i.is_dense = False
-            elif cfg.forced_big == 0:     # all work through Little pipelines
-                for i in infos:
-                    i.is_dense = True
+            elif cfg.mode == "fixed":
+                if cfg.forced_little == 0:  # all work through Big pipelines
+                    for i in infos:
+                        i.is_dense = False
+                elif cfg.forced_big == 0:   # all through Little pipelines
+                    for i in infos:
+                        i.is_dense = True
 
-        dense = [i for i in infos if i.is_dense and i.num_edges > 0]
-        sparse = [i for i in infos if not i.is_dense and i.num_edges > 0]
-        little_works = {i.pid: store.little_work(i.pid) for i in dense}
-        big_works, big_ests = [], []
-        for batch in schedule.batch_sparse(sparse, geom.big_batch):
-            big_works.append(store.big_work(tuple(i.pid for i in batch)))
-            big_ests.append(perf_model.estimate_big_batch(batch, geom,
-                                                          cfg.hw))
+            dense = [i for i in infos if i.is_dense and i.num_edges > 0]
+            sparse = [i for i in infos
+                      if not i.is_dense and i.num_edges > 0]
+            sp.set(dense=len(dense), sparse=len(sparse))
 
-        plan = schedule.plan_from_config(infos, little_works, big_works,
-                                         big_ests, geom, cfg)
+        with obs.span("plan.blockings", "planner"):
+            little_works = {i.pid: store.little_work(i.pid) for i in dense}
+            big_works, big_ests = [], []
+            for batch in schedule.batch_sparse(sparse, geom.big_batch):
+                big_works.append(
+                    store.big_work(tuple(i.pid for i in batch)))
+                big_ests.append(perf_model.estimate_big_batch(batch, geom,
+                                                              cfg.hw))
+
+        with obs.span("plan.schedule", "planner"):
+            plan = schedule.plan_from_config(infos, little_works,
+                                             big_works, big_ests, geom, cfg)
         t_block = store.t_block - t_block0
         return PlanBundle(config=cfg, infos=infos, little_works=little_works,
                           big_works=big_works, big_ests=big_ests, plan=plan,

@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..graphs.formats import Graph, relabel
 from . import partition as part
 from .types import BlockedEdges, Geometry, PartitionInfo
@@ -75,23 +76,27 @@ class GraphStore:
         self._fp = fingerprint
 
         t0 = time.perf_counter()
-        if perm is not None:
-            perm = np.asarray(perm, dtype=np.int32)
-            if perm.shape[0] != graph.num_vertices:
-                raise ValueError(
-                    f"perm has {perm.shape[0]} entries for a graph of "
-                    f"{graph.num_vertices} vertices")
-            self.graph = relabel(graph, perm, name_suffix="_perm")
-            self.perm = perm
-        elif use_dbg:
-            self.graph, self.perm = part.apply_dbg(graph)
-        else:
-            self.graph = graph
-            self.perm = np.arange(graph.num_vertices, dtype=np.int32)
+        with obs.span("store.dbg", "store", V=graph.num_vertices,
+                      E=graph.num_edges, use_dbg=use_dbg):
+            if perm is not None:
+                perm = np.asarray(perm, dtype=np.int32)
+                if perm.shape[0] != graph.num_vertices:
+                    raise ValueError(
+                        f"perm has {perm.shape[0]} entries for a graph of "
+                        f"{graph.num_vertices} vertices")
+                self.graph = relabel(graph, perm, name_suffix="_perm")
+                self.perm = perm
+            elif use_dbg:
+                self.graph, self.perm = part.apply_dbg(graph)
+            else:
+                self.graph = graph
+                self.perm = np.arange(graph.num_vertices, dtype=np.int32)
         self.t_dbg = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        self._infos, self.edges = part.partition_graph(self.graph, geom)
+        with obs.span("store.partition", "store") as sp:
+            self._infos, self.edges = part.partition_graph(self.graph, geom)
+            sp.set(partitions=len(self._infos))
         self.V_pad = part.padded_num_vertices(self.graph.num_vertices, geom)
         self.t_partition = time.perf_counter() - t0
 
@@ -266,7 +271,10 @@ class GraphStore:
             if bundle is not None:
                 self._plan_cache.move_to_end(key)
                 return bundle
-            bundle = Planner(self, config).build()
+            with obs.span("plan.build", "planner",
+                          n_lanes=config.n_lanes) as sp:
+                bundle = Planner(self, config).build()
+                sp.set(est_makespan=bundle.plan.est_makespan)
             self._plan_cache[key] = bundle
             while len(self._plan_cache) > self.max_plans:
                 self._plan_cache.popitem(last=False)

@@ -1,0 +1,24 @@
+"""Structured observability: tracing spans + perf-model drift.
+
+The serving stack has good *aggregate* metrics (ServiceMetrics
+percentiles, Prometheus counters) but aggregates can't answer "where
+did THIS request's 900 ms go?". This package adds:
+
+* :mod:`~repro.obs.trace` — a lock-guarded :class:`Tracer` producing
+  nested :class:`Span` records with thread-local context propagation,
+  explicit carriers across thread/process boundaries, and
+  Chrome-trace/Perfetto JSON export.
+* :mod:`~repro.obs.drift` — :class:`DriftAccumulator`, aggregating
+  measured-vs-model-estimated lane times into the per-pipeline-kind
+  drift report that device-spec recalibration (ROADMAP item 1) needs.
+
+See docs/OBSERVABILITY.md for the span taxonomy and usage.
+"""
+from .drift import DriftAccumulator
+from .trace import (NOOP_SPAN, Span, SpanContext, Tracer, current,
+                    current_ctx, current_tracer, span)
+
+__all__ = [
+    "DriftAccumulator", "NOOP_SPAN", "Span", "SpanContext", "Tracer",
+    "current", "current_ctx", "current_tracer", "span",
+]

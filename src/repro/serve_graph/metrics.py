@@ -21,7 +21,56 @@ import threading
 from collections import deque
 from typing import Deque, Dict, Optional
 
-__all__ = ["RequestMetrics", "ServiceMetrics"]
+from ..obs import DriftAccumulator
+
+__all__ = ["RequestMetrics", "ServiceMetrics", "merge_expositions"]
+
+
+def _escape_label(v) -> str:
+    """Escape a label VALUE per the Prometheus text exposition grammar:
+    backslash, double-quote and newline must be escaped (backslash
+    first, or the other escapes get double-escaped)."""
+    return (str(v).replace("\\", "\\\\").replace("\n", "\\n")
+            .replace('"', '\\"'))
+
+
+def merge_expositions(*texts: str) -> str:
+    """Merge Prometheus text expositions into one valid document.
+
+    The control plane concatenates ``ServiceMetrics.render_prometheus``
+    with its own scheduler/pool/job blocks; a metric family appearing
+    in more than one input would then carry duplicate ``# HELP`` /
+    ``# TYPE`` headers (invalid — parsers reject repeated metadata).
+    This groups samples by family, keeps the FIRST help/type header of
+    each, and preserves first-appearance family order."""
+    help_: Dict[str, str] = {}
+    type_: Dict[str, str] = {}
+    samples: Dict[str, list] = {}
+    for text in texts:
+        for line in text.splitlines():
+            if not line.strip():
+                continue
+            if line.startswith("# HELP ") or line.startswith("# TYPE "):
+                parts = line.split(None, 3)
+                if len(parts) < 3:
+                    continue
+                name = parts[2]
+                target = help_ if parts[1] == "HELP" else type_
+                target.setdefault(name, line)
+                samples.setdefault(name, [])
+            elif line.startswith("#"):
+                continue
+            else:
+                name = line.split("{", 1)[0].split(" ", 1)[0]
+                samples.setdefault(name, []).append(line)
+    out = []
+    for name, lines in samples.items():
+        if name in help_:
+            out.append(help_[name])
+        if name in type_:
+            out.append(type_[name])
+        out.extend(lines)
+    return "\n".join(out) + "\n"
 
 
 @dataclasses.dataclass
@@ -115,6 +164,9 @@ class ServiceMetrics:
         self._stage: Dict[str, _Reservoir] = {
             s: _Reservoir(reservoir_size) for s in self.STAGES}
         self._queue_depth_fn = None  # wired by the service
+        # service-level perf-model drift sink: executors chain their
+        # per-run accumulators to this one (see repro.obs.drift)
+        self.drift = DriftAccumulator()
 
     def _tenant(self, tenant: str) -> Dict[str, int]:
         t = self._tenants.get(tenant)
@@ -207,6 +259,16 @@ class ServiceMetrics:
             else:
                 self.failed += 1
                 t["failed"] += 1
+            if m.coalesced:
+                # INVARIANT: a coalesced duplicate never contributes to
+                # the per-stage reservoirs — it did not queue, build, or
+                # run anything; only its own end-to-end latency counts.
+                # The service keeps stage times None on coalesced
+                # records, but this guard is the layer that enforces it
+                # even if a caller fills them in.
+                if m.t_total_ms is not None:
+                    self._stage["total"].add(m.t_total_ms)
+                return
             for stage, val in (("queue", m.t_queue_ms),
                                ("store", m.t_store_ms),
                                ("plan", m.t_plan_ms),
@@ -268,6 +330,7 @@ class ServiceMetrics:
                 snap[f"p99_{s}_ms"] = self._stage[s].percentile(99)
         snap["store_hit_rate"] = self.store_hit_rate
         snap["plan_hit_rate"] = self.plan_hit_rate
+        snap["drift"] = self.drift.report()   # its own lock
         return snap
 
     def snapshot_json(self, **extra) -> str:
@@ -291,8 +354,9 @@ class ServiceMetrics:
             for labels, val in samples:
                 if val is None:
                     val = "NaN"
-                lab = ("{" + ",".join(f'{k}="{v}"' for k, v in labels)
-                       + "}") if labels else ""
+                lab = ("{" + ",".join(
+                    f'{k}="{_escape_label(v)}"' for k, v in labels)
+                    + "}") if labels else ""
                 out.append(f"{prefix}_{name}{lab} {val}")
 
         metric("requests_total", "counter", "Requests by final outcome.",
@@ -334,4 +398,15 @@ class ServiceMetrics:
                [((("tenant", t), ("outcome", o)), c)
                 for t, cs in sorted(snap["tenants"].items())
                 for o, c in cs.items()])
+        drift = snap["drift"]
+        metric("perf_model_drift", "gauge",
+               "Measured/estimated time ratio per pipeline kind "
+               "(1.0 = the perf model is exact).",
+               [((("kind", k),), rep["ratio"])
+                for k, rep in sorted(drift.items())])
+        metric("perf_model_drift_samples", "counter",
+               "Measured-vs-estimated samples folded into the drift "
+               "report, per pipeline kind.",
+               [((("kind", k),), rep["n"])
+                for k, rep in sorted(drift.items())])
         return "\n".join(out) + "\n"

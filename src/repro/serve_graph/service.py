@@ -45,6 +45,7 @@ Submission by fingerprint (no graph payload on the hot path)::
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import threading
 import time
@@ -53,6 +54,7 @@ from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from .. import obs
 from ..control.pool import WorkerCrashed, WorkerPool
 from ..control.scheduler import (DeadlineExpired, JobScheduler, QueueFull,
                                  QuotaExceeded, RejectedJob, TenantQuota)
@@ -131,6 +133,7 @@ class UpdateResult:
     retired: str
     stats: Optional[dict]
     t_update_ms: float
+    trace_id: Optional[str] = None   # set when the service has a tracer
 
 
 class ServiceClosed(RuntimeError):
@@ -186,7 +189,8 @@ class _Job:
 
     __slots__ = ("key", "skey", "graph", "app_name", "make_app", "config",
                  "use_dbg", "geom", "max_iters", "path", "shard", "handles",
-                 "t_submit", "tenant", "priority", "model_est", "observers")
+                 "t_submit", "tenant", "priority", "model_est", "observers",
+                 "trace_ctx", "root_span", "queue_span")
 
     def __init__(self, key, skey: StoreKey, graph: Optional[Graph],
                  app_name: str, make_app, config: PlanConfig,
@@ -212,6 +216,11 @@ class _Job:
         self.handles: List[RequestHandle] = []
         self.observers: List = []     # control-plane lifecycle callbacks
         self.t_submit = time.perf_counter()
+        # tracing carrier across the queue hand-off: the submitting
+        # thread starts these, the draining worker ends/activates them
+        self.trace_ctx: Optional[obs.SpanContext] = None
+        self.root_span: Optional[obs.Span] = None
+        self.queue_span: Optional[obs.Span] = None
 
 
 class GraphService:
@@ -282,13 +291,17 @@ class GraphService:
                  default_quota: Optional[TenantQuota] = None,
                  quotas: Optional[Dict[str, TenantQuota]] = None,
                  pool: Union[WorkerPool, int, None] = None,
-                 metrics: Optional[ServiceMetrics] = None):
+                 metrics: Optional[ServiceMetrics] = None,
+                 tracer: Optional[obs.Tracer] = None):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
         if executor_byte_budget is not None and executor_byte_budget < 1:
             raise ValueError("executor_byte_budget must be >= 1, got "
                              f"{executor_byte_budget}")
         self.metrics = metrics or ServiceMetrics()
+        # optional end-to-end tracing (repro.obs): every job gets a root
+        # span carried across the queue/pool boundaries; None = off
+        self.tracer = tracer
         self.cache = cache or GraphStoreCache(
             byte_budget=byte_budget, max_stores=max_stores,
             on_evict=self._on_store_evicted)
@@ -401,6 +414,32 @@ class GraphService:
                geom: Optional[Geometry] = None,
                use_dbg: Optional[bool] = None,
                keep_base: bool = False) -> UpdateResult:
+        """Trace-wrapping front door for :meth:`_update_impl` — updates
+        run in the CALLER's thread, so the root span starts and the
+        context activates here (there is no queue hand-off). See
+        :meth:`_update_impl` for semantics."""
+        tr = self.tracer
+        if tr is None:
+            return self._update_impl(fingerprint, delta, geom=geom,
+                                     use_dbg=use_dbg, keep_base=keep_base)
+        root = tr.start_trace("service.update", "service",
+                              fingerprint=fingerprint[:12])
+        try:
+            with tr.activate(root.context):
+                res = self._update_impl(fingerprint, delta, geom=geom,
+                                        use_dbg=use_dbg,
+                                        keep_base=keep_base)
+            res.trace_id = root.trace_id
+            root.end(outcome="done", mode=res.mode)
+            return res
+        except BaseException as exc:
+            root.end(outcome="failed", error=str(exc))
+            raise
+
+    def _update_impl(self, fingerprint: str, delta: GraphDelta, *,
+                     geom: Optional[Geometry] = None,
+                     use_dbg: Optional[bool] = None,
+                     keep_base: bool = False) -> UpdateResult:
         """Apply a :class:`~repro.streaming.GraphDelta` to a served
         graph and re-key the store cache to the new chained snapshot
         fingerprint.
@@ -462,13 +501,22 @@ class GraphService:
                         # plan rebuild stays here — the packed device
                         # payloads it carries over live in this process
                         t_p = time.perf_counter()
-                        result = self._pool.apply(store, delta)
-                        result.stats.update(rebuild_plans(
-                            store, result.store, result.dirty_pids))
+                        tr = obs.current_tracer()
+                        if tr is not None and obs.current_ctx() is not None:
+                            with obs.span("pool.apply", "pool") as sp:
+                                result, wspans = self._pool.apply(
+                                    store, delta, trace=True)
+                            tr.adopt(wspans, sp.context)
+                        else:
+                            result = self._pool.apply(store, delta)
+                        with obs.span("plan.rebuild", "planner"):
+                            result.stats.update(rebuild_plans(
+                                store, result.store, result.dirty_pids))
                         result.stats["t_apply_ms"] = \
                             (time.perf_counter() - t_p) * 1e3
                     else:
-                        result = apply_delta(store, delta)
+                        with obs.span("store.apply_delta", "store"):
+                            result = apply_delta(store, delta)
                     # lineage anchor for UNREGISTERED bases: a root
                     # store still knows its source Graph, and capturing
                     # it keeps the chained fingerprint rebuildable after
@@ -590,6 +638,17 @@ class GraphService:
             # DBG + lexsort + partition stats run in a worker process;
             # a WorkerCrashed propagates like any builder failure (the
             # cache lease releases, the job's handles get the error)
+            tr = obs.current_tracer()
+            if tr is not None and obs.current_ctx() is not None:
+                # trace carrier across the process boundary: the worker
+                # records spans into a throwaway local tracer and ships
+                # them back as dicts; adopt() re-parents them here
+                with obs.span("pool.build_store", "pool") as sp:
+                    store, wspans = self._pool.build_store(
+                        graph, geom=geom, use_dbg=use_dbg, fp=fp,
+                        max_plans=self.max_plans_per_store, trace=True)
+                tr.adopt(wspans, sp.context)
+                return store
             return self._pool.build_store(
                 graph, geom=geom, use_dbg=use_dbg, fp=fp,
                 max_plans=self.max_plans_per_store)
@@ -733,6 +792,18 @@ class GraphService:
                 handle._job = job
                 if observer is not None:
                     job.observers.append(observer)
+                if self.tracer is not None:
+                    # root + queue spans start HERE (the submit thread);
+                    # the worker thread ends the queue span at pickup
+                    # and activates the root context — the explicit
+                    # carrier across the scheduler hand-off
+                    job.root_span = self.tracer.start_trace(
+                        f"job:{app_name}", "service", app=app_name,
+                        fingerprint=fp[:12], tenant=tenant,
+                        priority=priority, request_id=rid)
+                    job.trace_ctx = job.root_span.context
+                    job.queue_span = self.tracer.start_span(
+                        "queue.wait", "scheduler", parent=job.trace_ctx)
                 self._inflight[job_key] = job
                 self._skey_jobs[skey] = self._skey_jobs.get(skey, 0) + 1
                 try:
@@ -751,7 +822,12 @@ class GraphService:
                     kind = ("queue_full" if isinstance(exc, QueueFull)
                             else "quota")
                     self.metrics.record_rejected(kind, tenant)
+                    if job.queue_span is not None:
+                        job.queue_span.end(rejected=kind)
+                    if job.root_span is not None:
+                        job.root_span.end(outcome="rejected", error=kind)
                     raise
+            handle.trace_ctx = job.trace_ctx   # control plane reads this
         self.metrics.record_submit(coalesced, tenant)
         self._notify(job, "coalesced" if coalesced else "queued",
                      request_id=rid)
@@ -794,6 +870,11 @@ class GraphService:
                         self._skey_jobs[job.skey] = left
         if do_retire:
             self.cache.retire(job.skey)
+        if removed_job:
+            if job.queue_span is not None:
+                job.queue_span.end(outcome="cancelled")
+            if job.root_span is not None:
+                job.root_span.end(outcome="cancelled")
         m = handle.metrics
         m.error = "cancelled"
         m.t_total_ms = (time.perf_counter() - handle._t_submit) * 1e3
@@ -882,6 +963,18 @@ class GraphService:
                 self._finish(job, error=exc)
 
     def _execute(self, job: _Job) -> None:
+        # end the queue-wait span at pickup, then run the body with the
+        # job's trace context active on THIS thread so every deeper
+        # obs.span (store build, plan, executor lanes) attaches to it
+        if job.queue_span is not None:
+            job.queue_span.end()
+        if self.tracer is not None and job.trace_ctx is not None:
+            with self.tracer.activate(job.trace_ctx):
+                self._execute_impl(job)
+        else:
+            self._execute_impl(job)
+
+    def _execute_impl(self, job: _Job) -> None:
         t_pickup = time.perf_counter()
         t_queue_ms = (t_pickup - job.t_submit) * 1e3
 
@@ -901,7 +994,14 @@ class GraphService:
         exec_key = (job.skey, job.key[1], job.config.cache_key(), job.path,
                     job.shard)
         t0 = time.perf_counter()
-        with self.cache.lease(job.skey, builder) as (store, store_hit):
+        with contextlib.ExitStack() as stack:
+            # the lease stays held for the whole execution, but the
+            # "service.store" span must cover only its ACQUISITION
+            # (fetch or build) — hence ExitStack instead of nesting
+            with obs.span("service.store", "service") as sp:
+                store, store_hit = stack.enter_context(
+                    self.cache.lease(job.skey, builder))
+                sp.set(hit=store_hit)
             t_store_ms = (time.perf_counter() - t0) * 1e3
 
             with self._lock:
@@ -913,7 +1013,9 @@ class GraphService:
             else:
                 plan_hit = store.has_plan(job.config)
                 t0 = time.perf_counter()
-                bundle = store.plan(job.config)
+                with obs.span("service.plan", "service",
+                              hit=plan_hit) as sp:
+                    bundle = store.plan(job.config)
                 t_plan_ms = (time.perf_counter() - t0) * 1e3
                 if job.shard is not None:
                     from ..sharding.executor import ShardedExecutor
@@ -921,7 +1023,8 @@ class GraphService:
                                          devices=job.shard, path=job.path)
                 else:
                     ex = Executor(store, bundle, job.make_app(),
-                                  path=job.path)
+                                  path=job.path,
+                                  drift_parent=self.metrics.drift)
                 nbytes = ex.memory_footprint()
                 with self._lock:
                     if exec_key in self._executors:
@@ -931,7 +1034,10 @@ class GraphService:
                     self._trim_executors()
 
             t0 = time.perf_counter()
-            result = ex.run(max_iters=job.max_iters)
+            with obs.span("service.execute", "service", app=job.app_name,
+                          executor_hit=hit is not None) as sp:
+                result = ex.run(max_iters=job.max_iters)
+                sp.set(iterations=result[1]["iterations"])
             t_execute_ms = (time.perf_counter() - t0) * 1e3
 
         self.metrics.record_execution(store_hit, plan_hit)
@@ -965,6 +1071,15 @@ class GraphService:
             # outside the service lock: retirement may evict and the
             # eviction hook re-enters the lock
             self.cache.retire(job.skey)
+        if job.queue_span is not None and not job.queue_span.ended:
+            # shed/cancel paths never reached pickup
+            job.queue_span.end(outcome=event or "failed")
+        if job.root_span is not None:
+            outcome = event or ("failed" if error is not None else "done")
+            if error is not None:
+                job.root_span.end(outcome=outcome, error=str(error))
+            else:
+                job.root_span.end(outcome=outcome)
         now = time.perf_counter()
         for h in handles:
             m = h.metrics
@@ -1006,6 +1121,9 @@ class GraphService:
             "cached_executors": n_exec,
             "executor_bytes": exec_bytes,
             "executor_byte_budget": self.executor_byte_budget,
+            "drift": self.metrics.drift.report(),
+            "tracer": (self.tracer.stats()
+                       if self.tracer is not None else None),
         }
 
 

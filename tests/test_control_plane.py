@@ -21,6 +21,8 @@ from repro.control import (ControlPlane, DeadlineExpired, JobScheduler,
                            JobStore, QueueFull, QuotaExceeded, RejectedJob,
                            TenantQuota, WorkerCrashed, WorkerPool)
 from repro.control.jobs import JobState
+from repro.serve_graph.metrics import (ServiceMetrics, _escape_label,
+                                       merge_expositions)
 from repro.core.planner import PlanConfig
 from repro.core.store import GraphStore
 from repro.core.types import Geometry
@@ -586,6 +588,115 @@ class TestControlPlaneHTTP:
             rejected = cp.jobs.list(state=JobState.REJECTED)
             assert len(rejected) == 1
             assert "quota" in rejected[0]["error"]
+
+
+# ---------------------------------------------------------------------------
+# prometheus exposition: merged families, escaping
+# ---------------------------------------------------------------------------
+
+def _parse_exposition(text):
+    """Strict promtext round-trip parse: returns {family: (help, type,
+    [sample lines])} and fails on malformed lines, duplicate metadata,
+    or samples appearing before their family's headers."""
+    import re as _re
+    sample_re = _re.compile(
+        r'^([a-zA-Z_:][a-zA-Z0-9_:]*)'
+        r'(\{(?:[a-zA-Z_][a-zA-Z0-9_]*="(?:\\.|[^"\\\n])*",?)*\})?'
+        r' (NaN|[-+0-9.eE]+)$')
+    fams = {}
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.startswith("# HELP ") or line.startswith("# TYPE "):
+            _, kw, name, rest = line.split(None, 3)
+            fam = fams.setdefault(name, [None, None, []])
+            idx = 0 if kw == "HELP" else 1
+            assert fam[idx] is None, f"duplicate # {kw} for {name}"
+            fam[idx] = rest
+        else:
+            m = sample_re.match(line)
+            assert m, f"malformed sample line: {line!r}"
+            name = m.group(1)
+            assert name in fams, f"sample before headers: {name}"
+            float(m.group(3)) if m.group(3) != "NaN" else None
+            fams[name][2].append(line)
+    return fams
+
+
+class TestPrometheusExposition:
+    def test_merge_expositions_dedupes_headers(self):
+        a = ("# HELP x_total Things.\n# TYPE x_total counter\n"
+             'x_total{k="a"} 1\n')
+        b = ("# HELP x_total Things again (dropped).\n"
+             "# TYPE x_total counter\n"
+             'x_total{k="b"} 2\n'
+             "# HELP y_depth Depth.\n# TYPE y_depth gauge\ny_depth 3\n")
+        merged = merge_expositions(a, b)
+        fams = _parse_exposition(merged)
+        assert fams["x_total"][0] == "Things."        # first header wins
+        assert len(fams["x_total"][2]) == 2           # both samples kept
+        assert fams["y_depth"][2] == ["y_depth 3"]
+        # family order is first appearance
+        assert list(fams) == ["x_total", "y_depth"]
+
+    def test_control_plane_prometheus_roundtrips(self, g1):
+        """The merged /metrics document must parse cleanly: one HELP +
+        one TYPE per family, every sample under its family (regression:
+        the old concatenation repeated nothing only by luck — a family
+        emitted by both the service and the plane would have carried
+        duplicate metadata)."""
+        with ControlPlane(workers=1, default_geom=GEOM,
+                          default_path="ref") as cp:
+            fp = cp.register(g1)
+            rec = cp.submit_job(fingerprint=fp, app="pagerank",
+                                max_iters=2)
+            cp.result(rec.id, timeout=WAIT)
+            fams = _parse_exposition(cp.prometheus())
+        for fam in ("regraph_requests_total", "regraph_latency_ms",
+                    "regraph_scheduler_depth", "regraph_jobs",
+                    "regraph_perf_model_drift"):
+            help_, type_, samples = fams[fam]
+            assert help_ and type_ and samples, fam
+
+    def test_label_escaping_deterministic(self):
+        m = ServiceMetrics()
+        nasty = 'ten"ant\\with\nnewline'
+        m.record_submit(False, tenant=nasty)
+        text = m.render_prometheus()
+        fams = _parse_exposition(text)      # no raw newline broke a line
+        line = [ln for ln in fams["regraph_tenant_requests_total"][2]
+                if "ten" in ln][0]
+        assert '\\"' in line and "\\\\" in line and "\\n" in line
+
+    def test_label_escaping_property(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        def unescape(s):
+            out, i = [], 0
+            while i < len(s):
+                c = s[i]
+                if c == "\\":
+                    assert i + 1 < len(s), "dangling backslash"
+                    n = s[i + 1]
+                    assert n in ('\\', 'n', '"'), f"bad escape \\{n}"
+                    out.append({'\\': '\\', 'n': '\n', '"': '"'}[n])
+                    i += 2
+                else:
+                    assert c not in ('\n', '"'), f"unescaped {c!r}"
+                    out.append(c)
+                    i += 1
+            return "".join(out)
+
+        @settings(max_examples=200, deadline=None)
+        @given(st.text(min_size=0, max_size=64))
+        def check(value):
+            esc = _escape_label(value)
+            assert "\n" not in esc          # never breaks the line
+            assert unescape(esc) == value   # lossless round-trip
+
+        check()
 
 
 # ---------------------------------------------------------------------------

@@ -308,6 +308,31 @@ def test_coalescing_n_submits_one_execution(graphs):
             assert h.metrics.store_hit is not None
 
 
+def test_coalesced_records_never_skew_stage_reservoirs():
+    """Regression: a coalesced duplicate must contribute ONLY its own
+    end-to-end latency — even if a buggy caller fills its stage times
+    in, record_done drops them. One poisoned twin would otherwise drag
+    a stage percentile toward a time that stage never spent."""
+    from repro.serve_graph.metrics import RequestMetrics, ServiceMetrics
+    m = ServiceMetrics()
+    for i in range(4):
+        m.record_done(RequestMetrics(
+            request_id=i, app="pagerank", fingerprint="f",
+            t_queue_ms=1.0, t_store_ms=1.0, t_plan_ms=1.0,
+            t_execute_ms=10.0, t_total_ms=12.0))
+    # a coalesced twin with (bogus) stage times filled in
+    m.record_done(RequestMetrics(
+        request_id=99, app="pagerank", fingerprint="f", coalesced=True,
+        t_queue_ms=9999.0, t_store_ms=9999.0, t_plan_ms=9999.0,
+        t_execute_ms=9999.0, t_total_ms=50.0))
+    snap = m.snapshot()
+    for stage in ("queue", "store", "plan", "execute"):
+        assert snap[f"p99_{stage}_ms"] < 9999.0, stage
+    # its end-to-end time DOES count (it is a real request outcome)
+    assert snap["p99_total_ms"] == 50.0
+    assert snap["completed"] == 5
+
+
 def test_distinct_requests_do_not_coalesce(graphs):
     with make_service(workers=1) as svc:
         a = svc.submit(graphs[0], "bfs", app_kwargs={"root": 0}, n_lanes=2)
