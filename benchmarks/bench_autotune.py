@@ -1,0 +1,171 @@
+"""Autotune gate — does closing the model-guided loop actually help?
+
+Three hard gates, all on the quick/smoke tier (CPU-feasible graphs):
+
+1. **Model accuracy after retune**: a forced calibrate-and-replan cycle
+   must leave every observed drift kind's windowed ``ratio_p50``
+   (measured / estimated) inside ``[0.5, 2.0]``. The analytic TPU
+   constants are orders of magnitude off on a CPU host — this gate
+   proves the fitted constants actually describe the machine the lanes
+   run on.
+
+2. **End-to-end win**: the retuned plan's measured makespan analogue
+   (max per-lane wall time, lanes timed one by one on the host — the
+   same quantity the LPT scheduler balances) must not exceed the
+   analytic plan's. A/B rounds are interleaved so host drift cancels.
+   When the retuned plan's lane structure is identical to the analytic
+   one (the model already chose right; recalibration only rescales
+   estimates), the makespans are definitionally equal and the ratio is
+   reported as 1.0 without timing.
+
+3. **Bit-identical results**: the retuned plan must produce exactly the
+   same pagerank output as the analytic plan — re-planning changes
+   scheduling, never semantics.
+
+Results go to stdout as CSV and to ``BENCH_autotune.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro import api
+from repro.autotune import AutoTuner, RetunePolicy
+from repro.core import gas
+from repro.core.executor import Executor
+from repro.core.planner import PlanConfig
+from repro.graphs import datasets
+
+from .common import GEOM, emit, store_for
+
+GATE_DRIFT_LO = 0.5
+GATE_DRIFT_HI = 2.0
+# the retuned plan may not be measurably WORSE; a little noise headroom
+GATE_MAKESPAN = 1.10
+
+
+def _lane_shape(plan):
+    """Structural identity of a plan's lane assignment (what execution
+    order/grouping actually depends on — estimates excluded)."""
+    return tuple(tuple((e.kind, e.work_id, e.block_lo, e.block_hi)
+                       for e in lane) for lane in plan.lanes)
+
+
+def _measured_makespan(ex) -> float:
+    return max(ex.time_lanes(repeats=1) or [0.0])
+
+
+def run(graphs=None, n_lanes=4, rounds=5, iters=3,
+        out_json="BENCH_autotune.json"):
+    graphs = graphs or ["ggs"]
+    records = []
+    worst_drift = (1.0, "none")
+    worst_ratio = 0.0
+    for name in graphs:
+        g = datasets.load(name)
+        store = store_for(g)
+        app = gas.make_pagerank(max_iters=iters)
+        cfg_a = PlanConfig(mode="model", n_lanes=n_lanes)   # analytic HW
+        bundle_a = store.plan(cfg_a)
+        tuner = AutoTuner(policy=RetunePolicy(drift_threshold=1.2,
+                                              min_samples=4,
+                                              cooldown_s=0.0),
+                          registry=False)
+        ex_a = Executor(store, bundle_a, app,
+                        calibrator=tuner.calibrator)
+        res_a, _ = ex_a.run(max_iters=iters)
+
+        t0 = time.time()
+        event = tuner.retune(store, ex_a, cfg_a, force=True)
+        t_retune = time.time() - t0
+        assert event.get("applied"), (
+            f"forced retune did not apply on {name}: "
+            f"{event.get('rejected') or event.get('error')}")
+
+        cfg_b = tuner.resolve_config(PlanConfig(mode="model",
+                                                n_lanes=n_lanes))
+        assert cfg_b.hw is tuner.hw, "resolve_config kept analytic HW"
+        bundle_b = store.plan(cfg_b)   # adopted by the retune: cache hit
+        ex_b = Executor(store, bundle_b, app)
+
+        # gate 3: bit-identical results across the plan swap
+        res_b, _ = ex_b.run(max_iters=iters)
+        identical = bool(np.array_equal(res_a, res_b))
+        assert identical, f"retuned plan changed results on {name}"
+
+        # gate 1: post-retune drift (tuner window was cleared at the
+        # retune; refill it from the RETUNED plan's estimates)
+        ex_b.drift.set_parent(tuner.drift)
+        for _ in range(3):            # p50 over a real window, not n=1
+            ex_b.time_lanes(repeats=2)
+        ex_b.run(max_iters=iters)
+        drift = tuner.drift.report()
+        for kind, rep in drift.items():
+            p50 = rep.get("ratio_p50")
+            if not p50 or p50 <= 0:
+                continue
+            sev = max(p50, 1.0 / p50)   # symmetric distance from 1.0
+            if sev > worst_drift[0]:
+                worst_drift = (sev, f"{name}.{kind}")
+
+        # gate 2: interleaved A/B on the measured makespan analogue
+        same_shape = _lane_shape(bundle_a.plan) == _lane_shape(bundle_b.plan)
+        if same_shape:
+            ratio = 1.0
+            mk_a = mk_b = None
+        else:
+            _measured_makespan(ex_a)     # warm both lane-jit sets
+            _measured_makespan(ex_b)
+            as_, bs_ = [], []
+            for _ in range(rounds):
+                as_.append(_measured_makespan(ex_a))
+                bs_.append(_measured_makespan(ex_b))
+            mk_a = float(np.median(as_))
+            mk_b = float(np.median(bs_))
+            ratio = mk_b / max(mk_a, 1e-12)
+        worst_ratio = max(worst_ratio, ratio)
+
+        rec = {
+            "graph": name, "V": g.num_vertices, "E": g.num_edges,
+            "n_lanes": n_lanes, "t_retune_s": t_retune,
+            "fit": event.get("fit"), "chosen": event.get("chosen"),
+            "candidates": event.get("candidates"),
+            "same_lane_shape": same_shape,
+            "makespan_analytic_s": mk_a, "makespan_retuned_s": mk_b,
+            "makespan_ratio": ratio, "bit_identical": identical,
+            "post_retune_drift": {
+                k: {kk: r.get(kk) for kk in ("n", "ratio", "ratio_p50")}
+                for k, r in drift.items()},
+        }
+        records.append(rec)
+        emit(f"autotune.{name}.retune", t_retune * 1e6,
+             f"applied chosen={event['chosen']['mode']}")
+        emit(f"autotune.{name}.makespan_ratio", ratio * 1e6,
+             "identical lane shape" if same_shape
+             else f"retuned/analytic={ratio:.3f}")
+        for k, r in sorted(drift.items()):
+            emit(f"autotune.{name}.drift.{k}",
+                 (r.get("ratio_p50") or 0.0) * 1e6,
+                 f"n={r['n']} gate [{GATE_DRIFT_LO}, {GATE_DRIFT_HI}]")
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"benchmark": "autotune",
+                       "gate_drift": [GATE_DRIFT_LO, GATE_DRIFT_HI],
+                       "gate_makespan": GATE_MAKESPAN,
+                       "records": records}, f, indent=2)
+        emit("autotune.artifact", 0.0, out_json)
+
+    assert worst_drift[0] <= 1.0 / GATE_DRIFT_LO, (
+        f"post-retune drift ratio_p50 {worst_drift[0]:.2f} "
+        f"({worst_drift[1]}) outside [{GATE_DRIFT_LO}, {GATE_DRIFT_HI}] "
+        f"— the calibrated model does not describe this host")
+    assert worst_ratio <= GATE_MAKESPAN, (
+        f"retuned plan is {worst_ratio:.2f}x the analytic plan's measured "
+        f"makespan (gate {GATE_MAKESPAN}) — re-planning made things worse")
+    emit("autotune.gate", 0.0,
+         f"pass drift<={worst_drift[0]:.2f} makespan_ratio<="
+         f"{worst_ratio:.3f}")
+    return records

@@ -32,10 +32,25 @@ def store_for(graph, geom=GEOM) -> api.GraphStore:
     return api.GraphStore(graph, geom=geom)
 
 
-def cpu_calibrated_hw(graph_or_store, app=None, geom=GEOM, n_samples=12):
+def cpu_calibrated_hw(graph_or_store, app=None, geom=GEOM, n_samples=12,
+                      use_cache=True):
     """Calibrate the perf model's coefficients on this host by timing a
     few partitions on both pipeline types (the paper benchmarks memory
-    latency to fit Eq. 4's a and b; we least-squares all four terms)."""
+    latency to fit Eq. 4's a and b; we least-squares all four terms).
+
+    Results are cached as a device spec per (host, geometry) in the
+    autotune SpecRegistry (REGRAPH_SPEC_DIR, default .regraph_specs/),
+    so a multi-benchmark run calibrates once; the cached path returns
+    ``(hw, [])``. ``use_cache=False`` forces a fresh calibration (and
+    refreshes the spec)."""
+    from repro.autotune import DeviceSpec, SpecRegistry, \
+        default_device_kind, geometry_key
+    registry = SpecRegistry()
+    kind = "bench-" + default_device_kind()
+    if use_cache:
+        spec = registry.get(kind, geom)
+        if spec is not None and spec.source == "bench":
+            return spec.hw, []
     app = app or gas.make_pagerank(max_iters=2)
     store = (graph_or_store if isinstance(graph_or_store, api.GraphStore)
              else store_for(graph_or_store, geom))
@@ -62,7 +77,14 @@ def cpu_calibrated_hw(graph_or_store, app=None, geom=GEOM, n_samples=12):
                 f(vprops).block_until_ready()
                 ts.append(time.perf_counter() - t0)
             samples.append((i, store.geom, kind, float(np.median(ts))))
-    return perf_model.calibrate(samples, perf_model.TPU_V5E), samples
+    hw, diag = perf_model.calibrate_full(samples, perf_model.TPU_V5E)
+    try:
+        registry.put(DeviceSpec(
+            device_kind=kind, geom_key=geometry_key(geom), hw=hw,
+            version=1, created_at=time.time(), source="bench", fit=diag))
+    except OSError:
+        pass   # read-only checkout: caching is best-effort
+    return hw, samples
 
 
 def mteps(graph, seconds_per_iter: float) -> float:

@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV lines (see benchmarks/common.emit).
   —        bench_sharding       sharded vs single-device fused (+ JSON)
   —        bench_control_plane  p99 update latency, threads vs pool (+ JSON)
   —        bench_obs            tracing-off vs tracing-on overhead (+ JSON)
+  —        bench_autotune       calibrate-and-replan gates (+ JSON)
 """
 from __future__ import annotations
 
@@ -25,7 +26,8 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: pipelines,heterogeneity,scalability,"
                          "preprocessing,amortization,sota,roofline,serving,"
-                         "fused,streaming,sharding,control_plane,obs")
+                         "fused,streaming,sharding,control_plane,obs,"
+                         "autotune")
     ap.add_argument("--quick", action="store_true",
                     help="smaller graph set (CI-speed)")
     ap.add_argument("--smoke", action="store_true",
@@ -36,10 +38,11 @@ def main() -> None:
     want = (None if args.only == "all"
             else set(args.only.split(",")))
 
-    from . import (bench_control_plane, bench_fused, bench_heterogeneity,
-                   bench_obs, bench_pipelines, bench_preprocessing,
-                   bench_roofline, bench_scalability, bench_serving,
-                   bench_sharding, bench_sota, bench_streaming)
+    from . import (bench_autotune, bench_control_plane, bench_fused,
+                   bench_heterogeneity, bench_obs, bench_pipelines,
+                   bench_preprocessing, bench_roofline, bench_scalability,
+                   bench_serving, bench_sharding, bench_sota,
+                   bench_streaming)
 
     suites = [
         ("pipelines", lambda: bench_pipelines.run(
@@ -93,6 +96,13 @@ def main() -> None:
         ("obs", lambda: bench_obs.run(
             graphs=["ggs"] if args.quick else ["ggs", "hws"],
             rounds=9 if args.smoke else 15)),
+        # gates the model-guided loop: post-retune drift ratio_p50 in
+        # [0.5, 2.0], retuned-vs-analytic measured makespan (interleaved
+        # A/B), bit-identical results across the plan swap
+        ("autotune", lambda: bench_autotune.run(
+            graphs=["ggs"] if args.quick else ["ggs", "hws"],
+            n_lanes=4 if args.quick else 8,
+            rounds=3 if args.smoke else 5)),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

@@ -63,6 +63,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Union
 
+from .autotune import (AutoTuner, Calibrator, DeviceSpec, RetunePolicy,
+                       SpecRegistry)
 from .control import (ControlPlane, DeadlineExpired, JobRecord,
                       JobScheduler, JobStore, QueueFull, QuotaExceeded,
                       RejectedJob, TenantQuota, WorkerCrashed, WorkerPool,
@@ -85,12 +87,14 @@ from .streaming import (GraphDelta, apply_delta, apply_delta_to_graph,
                         rebuild_plans, splice_delta)
 
 __all__ = [
-    "BUILTIN_APPS", "CompiledApp", "ControlPlane", "DeadlineExpired",
+    "AutoTuner", "BUILTIN_APPS", "Calibrator", "CompiledApp",
+    "ControlPlane", "DeadlineExpired", "DeviceSpec",
     "DriftAccumulator", "Executor", "GASApp", "Geometry", "GraphDelta",
     "GraphService", "GraphStore", "GraphStoreCache", "HW", "JobRecord",
     "JobScheduler", "JobStore", "LanePlacement", "PlanBundle",
     "PlanConfig", "Planner", "QueueFull", "QuotaExceeded", "RejectedJob",
-    "RequestHandle", "SchedulePlan", "ServiceMetrics", "ShardedExecutor",
+    "RequestHandle", "RetunePolicy", "SchedulePlan", "ServiceMetrics",
+    "ShardedExecutor", "SpecRegistry",
     "ShardedLanes", "Span", "SpanContext", "TPU_V5E", "TPU_V5E_SCALED",
     "TenantQuota", "Tracer", "UpdateResult", "WorkerCrashed",
     "WorkerPool", "apply_delta", "apply_delta_to_graph",

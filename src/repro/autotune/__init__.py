@@ -1,0 +1,31 @@
+"""Autotune: device-spec registry, online calibration, drift-driven
+re-planning (ROADMAP item 1 — closing the model-guided loop).
+
+- :mod:`.specs` — persisted, versioned calibrated HW constants keyed by
+  (device kind, Geometry).
+- :mod:`.calibrator` — folds measured lane timings into guarded
+  ``perf_model.fit_terms`` fits.
+- :mod:`.retuner` — the drift-watching policy that recalibrates,
+  re-searches the plan space and atomically swaps plans into the store.
+
+See docs/CALIBRATION.md for the end-to-end story.
+"""
+from .calibrator import CalibrationFit, Calibrator
+from .retuner import AutoTuner, RetunePolicy, candidate_configs, search_plan
+from .specs import (DeviceSpec, SpecRegistry, default_device_kind,
+                    geometry_key, hw_from_dict, hw_to_dict)
+
+__all__ = [
+    "AutoTuner",
+    "CalibrationFit",
+    "Calibrator",
+    "DeviceSpec",
+    "RetunePolicy",
+    "SpecRegistry",
+    "candidate_configs",
+    "default_device_kind",
+    "geometry_key",
+    "hw_from_dict",
+    "hw_to_dict",
+    "search_plan",
+]

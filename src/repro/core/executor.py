@@ -100,7 +100,8 @@ class Executor:
 
     def __init__(self, store, bundle: PlanBundle, app: GASApp,
                  path: Optional[str] = None, fuse_lanes: bool = True,
-                 drift_parent: Optional[obs.DriftAccumulator] = None):
+                 drift_parent: Optional[obs.DriftAccumulator] = None,
+                 calibrator=None):
         self.store = store
         self.bundle = bundle
         self.app = app
@@ -112,6 +113,22 @@ class Executor:
         # accumulator when this executor runs under a GraphService
         self.drift = obs.DriftAccumulator(parent=drift_parent)
         self._lane_est = perf_model.lane_estimates(bundle.plan)
+        # the estimate a measured iteration is compared against for the
+        # "makespan" drift kind: plan.est_makespan assumes lanes run in
+        # parallel (the device model); under a serial-host calibration
+        # (combine == "sum") this executor runs lanes back-to-back, so
+        # the like-for-like estimate is the SUM of lane estimates —
+        # otherwise a perfectly-fitted model on a well-balanced plan
+        # would show ~n_lanes of phantom drift and thrash the retuner
+        if bundle.config.hw.combine == "sum":
+            self._est_iteration = sum(e for e, _ in self._lane_est)
+        else:
+            self._est_iteration = bundle.plan.est_makespan
+        # optional autotune sink: measured lane timings land here as
+        # (feature row, kind, seconds) calibration samples — both from
+        # traced runs and from time_lanes sweeps (repro.autotune)
+        self._calibrator = calibrator
+        self._lane_rows = None   # lazy perf_model.lane_feature_rows
 
         t0 = time.perf_counter()
         # shared across every app on this plan (memoized on the bundle);
@@ -234,7 +251,9 @@ class Executor:
                               n_entries=n_entries):
                     lane_out = f(vprops)
                     jax.block_until_ready(lane_out)
-                self.drift.add(kind_i, e_i, time.perf_counter() - t0)
+                measured = time.perf_counter() - t0
+                self.drift.add(kind_i, e_i, measured)
+                self._calib_add(li, kind_i, measured)
                 outs.extend(lane_out)
             with obs.span("executor.merge_apply", "executor", it=it):
                 new = merge_apply(vprops, outs, self.aux, it)
@@ -259,7 +278,7 @@ class Executor:
             self._iter_fn = self._build_iteration()
         vprops = self.init_props()
         iters = max_iters or self.app.max_iters
-        est_makespan = self.plan.est_makespan
+        est_makespan = self._est_iteration
         history = []
         it_done = 0
         for it in range(iters):
@@ -342,7 +361,22 @@ class Executor:
             if i < len(self._lane_est):
                 e_i, kind_i = self._lane_est[i]
                 self.drift.add(kind_i, e_i, med)
+                self._calib_add(i, kind_i, med)
         return out
+
+    def _calib_add(self, lane_idx: int, kind: str, measured_s: float):
+        """Forward one measured lane time to the attached Calibrator as a
+        (feature row, kind, seconds) sample. Rows are per-lane sums of
+        unit-coefficient model terms (perf_model.lane_feature_rows) and
+        depend only on the plan + base HW constants, so they are computed
+        once per executor."""
+        if self._calibrator is None:
+            return
+        if self._lane_rows is None:
+            self._lane_rows = perf_model.lane_feature_rows(self.bundle)
+        if lane_idx < len(self._lane_rows):
+            self._calibrator.add_lane(self._lane_rows[lane_idx], kind,
+                                      measured_s)
 
     # ------------------------------------------------------------------
     def memory_footprint(self) -> int:

@@ -182,7 +182,8 @@ class PlanBundle:
                               reused=len(seed) if seed else 0):
                     self._packed_lanes = ops.pack_lanes(
                         self.plan, self.little_works, self.big_works,
-                        reuse=seed)
+                        reuse=seed,
+                        max_working_set=self.config.hw.vmem_lane_budget)
                 if seed:
                     self.packed_lanes_reused = len(seed)
                     self.packed_bytes_reused = sum(

@@ -281,6 +281,22 @@ class GraphStore:
                 self.plan_evictions += 1
         return bundle
 
+    def adopt_plan(self, bundle) -> None:
+        """Insert a pre-built :class:`PlanBundle` into the plan LRU under
+        its config's cache key (replacing any cached bundle for that
+        key). This is the autotuner's atomic plan swap: the retuner
+        builds + scores candidates OUTSIDE the cache (via Planner), then
+        publishes only the winner here — one dict assignment under the
+        plan lock, so concurrent ``plan()`` callers see either the old
+        bundle or the new one, never a partial build."""
+        key = bundle.config.cache_key()
+        with self._plan_lock:
+            self._plan_cache[key] = bundle
+            self._plan_cache.move_to_end(key)
+            while len(self._plan_cache) > self.max_plans:
+                self._plan_cache.popitem(last=False)
+                self.plan_evictions += 1
+
     def peek_plan(self, config=None):
         """Return the cached :class:`PlanBundle` for ``config`` WITHOUT
         building on a miss and without touching LRU recency (a pure

@@ -210,29 +210,84 @@ def _validate_packed(p: dict) -> None:
         "packed entries write overlapping destination tiles"
 
 
-def _pack_lane_np(lane, little_works, big_works) -> List[dict]:
+def estimate_working_set(entries: List[dict], geom: Geometry) -> int:
+    """Estimated on-chip (VMEM) working set, in bytes, of packing these
+    same-kind host entries into ONE payload: the full output-tile
+    accumulator, the gathered unique-source table (Big; distinct tables
+    counted once, matching :func:`_pack_group`'s dedup) or one streamed
+    source window (Little), plus one edge-block slab. The HBM-resident
+    edge stream itself is excluded — it is streamed block-by-block."""
+    ws = geom.E_BLK * 16                     # src+dst+weights+valid slab
+    ws += sum(e["n_out_tiles"] for e in entries) * geom.T * 4
+    if entries and entries[0]["kind"] == "big":
+        seen, tot = set(), 0
+        for e in entries:
+            tab = e["unique_src"]
+            if id(tab) not in seen:
+                seen.add(id(tab))
+                tot += int(tab.shape[0])
+        ws += tot * 4
+    else:
+        ws += geom.W * 4
+    return int(ws)
+
+
+def _chunk_entries(entries: List[dict], geom: Geometry,
+                   budget: float) -> List[List[dict]]:
+    """Greedily split a same-kind entry list so each chunk's estimated
+    working set stays under ``budget`` bytes (0/negative = no limit).
+    Chunk boundaries fall on ENTRY boundaries, which are tile-snapped
+    already — each chunk is a valid packed payload and the lane's
+    results stay bit-identical (the merge is one scatter-set over
+    globally disjoint tiles either way; only launch count changes).
+    A single entry over budget still forms its own chunk — entry
+    granularity is the floor (the scheduler's block splits control it)."""
+    if budget <= 0 or not entries:
+        return [entries] if entries else []
+    chunks, cur = [], []
+    for e in entries:
+        if cur and estimate_working_set(cur + [e], geom) > budget:
+            chunks.append(cur)
+            cur = []
+        cur.append(e)
+    if cur:
+        chunks.append(cur)
+    return chunks
+
+
+def _pack_lane_np(lane, little_works, big_works,
+                  max_working_set: float = 0.0) -> List[dict]:
     """Host-side packed payloads for one lane: at most one per kind (a
     lane may mix Little and Big entries when there are fewer lanes than
-    pipeline classes). Returns [] for a fully snapped-away lane."""
+    pipeline classes), more when ``max_working_set`` (bytes) forces
+    VMEM-pressure chunking. Returns [] for a fully snapped-away lane."""
     groups = {"little": [], "big": []}
+    geom = None
     for e in lane:
         work = (little_works[e.work_id] if e.kind == "little"
                 else big_works[e.work_id])
+        geom = work.geom
         p = _entry_np(work, e.block_lo, e.block_hi)
         if p is not None:
             groups[e.kind].append(p)
-    return [_pack_group(g) for g in (groups["little"], groups["big"]) if g]
+    return [_pack_group(chunk)
+            for g in (groups["little"], groups["big"]) if g
+            for chunk in _chunk_entries(g, geom, max_working_set)]
 
 
-def pack_lane(lane, little_works, big_works) -> List[dict]:
-    """Pack one lane's plan entries into at most two device payloads:
-    materialized host-side, concatenated, validated, uploaded once."""
+def pack_lane(lane, little_works, big_works,
+              max_working_set: float = 0.0) -> List[dict]:
+    """Pack one lane's plan entries into at most two device payloads
+    (more under VMEM chunking): materialized host-side, concatenated,
+    validated, uploaded once."""
     return [_upload_payload(p)
-            for p in _pack_lane_np(lane, little_works, big_works)]
+            for p in _pack_lane_np(lane, little_works, big_works,
+                                   max_working_set)]
 
 
 def pack_lanes(plan, little_works, big_works,
-               reuse: Optional[dict] = None) -> List[List[dict]]:
+               reuse: Optional[dict] = None,
+               max_working_set: float = 0.0) -> List[List[dict]]:
     """Fused counterpart of :func:`materialize_lanes`: one packed payload
     per (lane, kind) instead of one payload per entry.
 
@@ -240,10 +295,16 @@ def pack_lanes(plan, little_works, big_works,
     streaming layer seeds it with payloads carried over from a
     pre-delta bundle whose lane is structurally unchanged). Reused lanes
     skip host-side packing AND the device upload entirely; they still
-    participate in the global tile-disjointness check below."""
+    participate in the global tile-disjointness check below.
+
+    ``max_working_set`` (bytes; 0 = off) chunks a lane's packed segments
+    when their estimated VMEM working set exceeds the device spec's
+    per-lane budget (``HW.vmem_lane_budget``) — bit-identical results,
+    just more launches on that lane."""
     reuse = reuse or {}
     host = [None if i in reuse
-            else _pack_lane_np(lane, little_works, big_works)
+            else _pack_lane_np(lane, little_works, big_works,
+                               max_working_set)
             for i, lane in enumerate(plan.lanes)]
     _check_lanes_disjoint(host, reuse)
     return [reuse[i] if lane is None else [_upload_payload(p) for p in lane]
@@ -270,7 +331,8 @@ def _check_lanes_disjoint(host, reuse) -> None:
 
 
 def pack_lanes_sharded(plan, little_works, big_works, owners, devices,
-                       reuse: Optional[dict] = None):
+                       reuse: Optional[dict] = None,
+                       max_working_set: float = 0.0):
     """Sharded counterpart of :func:`pack_lanes`: pack each lane
     host-side and upload its payloads to the OWNER device
     (``devices[owners[i]]`` for lane ``i``) instead of the default one.
@@ -287,7 +349,8 @@ def pack_lanes_sharded(plan, little_works, big_works, owners, devices,
     """
     reuse = reuse or {}
     host = [None if i in reuse
-            else _pack_lane_np(lane, little_works, big_works)
+            else _pack_lane_np(lane, little_works, big_works,
+                               max_working_set)
             for i, lane in enumerate(plan.lanes)]
     _check_lanes_disjoint(host, reuse)
     lanes, moved, bytes_moved = [], 0, 0

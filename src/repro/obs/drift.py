@@ -45,6 +45,15 @@ class DriftAccumulator:
         self._tot: Dict[str, Dict[str, float]] = {}
         self._recent: Dict[str, deque] = {}
 
+    def set_parent(self, parent: Optional["DriftAccumulator"]) -> None:
+        """(Re)chain this accumulator to a parent sink. The autotune
+        layer uses this to splice its own clearable accumulator above
+        an already-constructed service-level one — executors keep
+        chaining to the service accumulator, samples keep flowing up."""
+        if parent is self:
+            raise ValueError("a DriftAccumulator cannot parent itself")
+        self._parent = parent
+
     def add(self, kind: str, est_s: float, measured_s: float) -> None:
         """Record one sample. Samples with a non-positive estimate are
         counted but excluded from ratio statistics."""

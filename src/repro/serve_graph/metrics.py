@@ -164,6 +164,10 @@ class ServiceMetrics:
         self._stage: Dict[str, _Reservoir] = {
             s: _Reservoir(reservoir_size) for s in self.STAGES}
         self._queue_depth_fn = None  # wired by the service
+        # drift-triggered recalibrations (repro.autotune); the gauge
+        # details (version, age) come from the pull hook below
+        self.retunes = 0
+        self._calibration_info_fn = None  # wired when autotune= is on
         # service-level perf-model drift sink: executors chain their
         # per-run accumulators to this one (see repro.obs.drift)
         self.drift = DriftAccumulator()
@@ -225,6 +229,20 @@ class ServiceMetrics:
         """Warm-path executor LRU evictions (count or byte budget)."""
         with self._lock:
             self.executor_evictions += n
+
+    def record_retune(self, n: int = 1) -> None:
+        """An applied drift-triggered recalibration + plan swap."""
+        with self._lock:
+            self.retunes += n
+
+    def _calibration_info(self):
+        fn = self._calibration_info_fn
+        if fn is None:
+            return None
+        try:
+            return fn()
+        except Exception:
+            return None
 
     def record_update(self, t_ms: float, stats: Optional[dict] = None,
                       deferred: bool = False, retired: bool = False) -> None:
@@ -322,6 +340,7 @@ class ServiceMetrics:
                 "rejected_queue_full": self.rejected_queue_full,
                 "rejected_quota": self.rejected_quota,
                 "shed_deadline": self.shed_deadline,
+                "retunes": self.retunes,
                 "tenants": {t: dict(c) for t, c in self._tenants.items()},
                 "queue_depth": self.queue_depth,
             }
@@ -331,6 +350,7 @@ class ServiceMetrics:
         snap["store_hit_rate"] = self.store_hit_rate
         snap["plan_hit_rate"] = self.plan_hit_rate
         snap["drift"] = self.drift.report()   # its own lock
+        snap["calibration"] = self._calibration_info()
         return snap
 
     def snapshot_json(self, **extra) -> str:
@@ -409,4 +429,18 @@ class ServiceMetrics:
                "report, per pipeline kind.",
                [((("kind", k),), rep["n"])
                 for k, rep in sorted(drift.items())])
+        metric("retunes_total", "counter",
+               "Applied drift-triggered recalibrations (perf-model "
+               "refit + plan re-derivation + atomic swap).",
+               [((), snap["retunes"])])
+        calib = snap.get("calibration")
+        if calib is not None:
+            metric("calibration_version", "gauge",
+                   "Device-spec version of the active calibrated HW "
+                   "constants (0 = analytic defaults).",
+                   [((), calib.get("version", 0))])
+            metric("calibration_age_seconds", "gauge",
+                   "Seconds since the active calibration was fitted "
+                   "(NaN until the first fit).",
+                   [((), calib.get("age_s"))])
         return "\n".join(out) + "\n"

@@ -292,7 +292,8 @@ class GraphService:
                  quotas: Optional[Dict[str, TenantQuota]] = None,
                  pool: Union[WorkerPool, int, None] = None,
                  metrics: Optional[ServiceMetrics] = None,
-                 tracer: Optional[obs.Tracer] = None):
+                 tracer: Optional[obs.Tracer] = None,
+                 autotune=None):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
         if executor_byte_budget is not None and executor_byte_budget < 1:
@@ -345,6 +346,23 @@ class GraphService:
         self._retire_pending: set = set()
         self._next_id = 0
         self._closed = False
+        # optional drift-driven autotuning (repro.autotune): accepts an
+        # AutoTuner instance, True (defaults), or a kwargs dict. The
+        # tuner's clearable drift accumulator is spliced ABOVE the
+        # service-level one so every executor sample reaches both.
+        self._autotuner = None
+        if autotune:
+            from ..autotune import AutoTuner
+            if isinstance(autotune, AutoTuner):
+                self._autotuner = autotune
+            elif isinstance(autotune, dict):
+                self._autotuner = AutoTuner(**autotune)
+            else:
+                self._autotuner = AutoTuner()
+            self._autotuner.load(self.default_geom)
+            self.metrics.drift.set_parent(self._autotuner.drift)
+            self.metrics._calibration_info_fn = \
+                self._autotuner.calibration_info
         self._workers = [
             threading.Thread(target=self._worker_loop, daemon=True,
                              name=f"graph-serve-{i}")
@@ -748,6 +766,12 @@ class GraphService:
                     f"fingerprint {fp[:12]}… is neither registered nor "
                     f"cached; pass the Graph or register() it first")
 
+        if self._autotuner is not None:
+            # rewrite default-shaped configs to the current calibrated HW
+            # and best-known split BEFORE keying: coalescing, cost
+            # estimation and plan lookup all see the effective config
+            config = self._autotuner.resolve_config(config, skey)
+
         job_key = (skey, app_token, config.cache_key(), max_iters, path,
                    shard)
         # cost estimation reads the store/plan caches (their own locks;
@@ -1022,9 +1046,12 @@ class GraphService:
                     ex = ShardedExecutor(store, bundle, job.make_app(),
                                          devices=job.shard, path=job.path)
                 else:
+                    calib = (self._autotuner.calibrator
+                             if self._autotuner is not None else None)
                     ex = Executor(store, bundle, job.make_app(),
                                   path=job.path,
-                                  drift_parent=self.metrics.drift)
+                                  drift_parent=self.metrics.drift,
+                                  calibrator=calib)
                 nbytes = ex.memory_footprint()
                 with self._lock:
                     if exec_key in self._executors:
@@ -1047,6 +1074,19 @@ class GraphService:
                      plan_hit=plan_hit, t_queue_ms=t_queue_ms,
                      t_store_ms=t_store_ms, t_plan_ms=t_plan_ms,
                      t_execute_ms=t_execute_ms)
+        # drift policy check AFTER the handles resolve: a retune sweeps
+        # time_lanes + rebuilds plans, and must not delay the request
+        # that happened to trip it. Sharded executors have no time_lanes
+        # path; single-device drift covers the same model constants.
+        if self._autotuner is not None and job.shard is None:
+            try:
+                ev = self._autotuner.observe(store, ex, job.config,
+                                             skey=job.skey)
+                if ev is not None and ev.get("applied"):
+                    self.metrics.record_retune()
+            except Exception as e:   # autotuning must never fail serving
+                self._autotuner._push_event(
+                    {"error": repr(e), "applied": False})
 
     def _finish(self, job: _Job, result=None, error=None, store_hit=None,
                 plan_hit=None, t_queue_ms=None, t_store_ms=None,
@@ -1107,6 +1147,61 @@ class GraphService:
                                     else "done"),
                      error=(None if error is None else str(error)))
 
+    # -- autotune -------------------------------------------------------
+    @property
+    def autotuner(self):
+        """The attached :class:`~repro.autotune.AutoTuner`, or None."""
+        return self._autotuner
+
+    def retune_now(self, graph: Union[Graph, str, None] = None, *,
+                   fingerprint: Optional[str] = None,
+                   app="pagerank", geom: Optional[Geometry] = None,
+                   use_dbg: Optional[bool] = None,
+                   config: Optional[PlanConfig] = None, **cfg) -> dict:
+        """Force a calibrate-and-replan cycle for one graph, bypassing
+        the drift policy (admin/debug path; the normal trigger is the
+        post-execution drift check). Returns the retune event dict."""
+        if self._autotuner is None:
+            raise RuntimeError("service was built without autotune=")
+        if config is not None and cfg:
+            raise ValueError("pass either config= or PlanConfig kwargs, "
+                             "not both")
+        config = config or PlanConfig(**cfg)
+        geom = geom or self.default_geom
+        use_dbg = self.default_use_dbg if use_dbg is None else bool(use_dbg)
+        graph_obj = graph if isinstance(graph, Graph) else None
+        fp = resolve_fingerprint(graph, fingerprint)
+        skey = store_key(fp, geom, use_dbg)
+        if graph_obj is None:
+            with self._lock:
+                graph_obj = self._registry.get(fp)
+            if graph_obj is None and skey not in self.cache:
+                raise KeyError(
+                    f"fingerprint {fp[:12]}… is neither registered nor "
+                    f"cached; pass the Graph or register() it first")
+        config = self._autotuner.resolve_config(config, skey)
+
+        def builder():
+            g = graph_obj
+            if g is None:
+                raise KeyError("store evicted and graph not registered")
+            if isinstance(g, _LazyGraph):
+                g = g.materialize()
+            return self._build_store(g, geom, use_dbg, fp=fp)
+
+        _, _, make_app = _normalize_app(app, None)
+        with self.cache.lease(skey, builder) as (store, _hit):
+            bundle = store.plan(config)
+            ex = Executor(store, bundle, make_app(),
+                          path=self.default_path,
+                          drift_parent=self.metrics.drift,
+                          calibrator=self._autotuner.calibrator)
+            event = self._autotuner.retune(store, ex, config, skey=skey,
+                                           force=True)
+        if event.get("applied"):
+            self.metrics.record_retune()
+        return event
+
     # -- reporting ------------------------------------------------------
     def stats(self) -> dict:
         with self._lock:
@@ -1122,6 +1217,8 @@ class GraphService:
             "executor_bytes": exec_bytes,
             "executor_byte_budget": self.executor_byte_budget,
             "drift": self.metrics.drift.report(),
+            "autotune": (self._autotuner.stats()
+                         if self._autotuner is not None else None),
             "tracer": (self.tracer.stats()
                        if self.tracer is not None else None),
         }

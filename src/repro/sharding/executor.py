@@ -146,7 +146,8 @@ def materialize_sharded(bundle, devices: tuple,
     owners = placement.device_of_lane
     lanes, moved, bytes_moved = ops.pack_lanes_sharded(
         bundle.plan, bundle.little_works, bundle.big_works,
-        owners, devices, reuse=seed)
+        owners, devices, reuse=seed,
+        max_working_set=bundle.config.hw.vmem_lane_budget)
     reused = sum(1 for i, ps in seed.items() if ps)
     bytes_reused = sum(ops.payload_nbytes(p)
                        for ps in seed.values() for p in ps)

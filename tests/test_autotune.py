@@ -1,0 +1,487 @@
+"""Autotune subsystem: guarded calibration fits, the device-spec
+registry, VMEM-pressure lane chunking, and the drift-driven
+calibrate-and-replan loop end to end (plan swap atomicity + bit-identical
+results across a retune).
+"""
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.autotune import (AutoTuner, Calibrator, DeviceSpec, RetunePolicy,
+                            SpecRegistry, candidate_configs,
+                            default_device_kind, geometry_key, hw_from_dict,
+                            hw_to_dict, search_plan)
+from repro.core import gas, perf_model
+from repro.core.executor import Executor
+from repro.core.planner import PlanConfig
+from repro.core.store import GraphStore
+from repro.core.types import Geometry
+from repro.graphs.rmat import rmat
+from repro.kernels import ops
+from repro.serve_graph import GraphService
+
+WAIT = 300.0
+
+
+@pytest.fixture(scope="module")
+def geom():
+    # partitions are U-sized dst ranges: 1024 vertices / U=256 gives 4
+    # partitions, so plans get real lane structure to search over
+    return Geometry(U=256, W=128, T=128, E_BLK=128, big_batch=2)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat(10, 8, seed=4, weighted=True)   # 1024 vertices
+
+
+@pytest.fixture(scope="module")
+def store(graph, geom):
+    return GraphStore(graph, geom=geom)
+
+
+def _synth_samples(store, geom, true_hw, n=None, noise=None, seed=0):
+    """Lane-style samples whose times come from a KNOWN ground-truth HW:
+    y = feature_row(info) . [c_edges, c_edges_big|c_edges, c_vertices,
+    c_compute, c_store, t_const]."""
+    coef = np.array([true_hw.c_edges,
+                     true_hw.c_edges_big or true_hw.c_edges,
+                     true_hw.c_vertices, true_hw.c_compute,
+                     true_hw.c_store, max(true_hw.t_const, 0.0)])
+    rng = np.random.default_rng(seed)
+    rows, kinds, ys = [], [], []
+    infos = [i for i in store.infos if i.num_edges > 0]
+    for rep in range(4):
+        for info in infos:
+            for kind in ("little", "big"):
+                row = np.asarray(perf_model.feature_row(
+                    info, geom, kind, perf_model.TPU_V5E))
+                y = float(row @ coef)
+                if noise is not None:
+                    y *= float(rng.uniform(1 - noise, 1 + noise))
+                rows.append(row)
+                kinds.append(kind)
+                ys.append(y)
+                if n is not None and len(rows) >= n:
+                    return rows, kinds, ys
+    return rows, kinds, ys
+
+
+# ------------------------------------------------------- calibration fit
+def test_calibration_round_trip(store, geom):
+    """Noiseless synthetic timings from a known HW: the fitted model
+    must reproduce the synthesized lane times almost exactly (the
+    coefficients themselves are not identifiable — te and tc are
+    collinear — so the contract is on predictions, not parameters)."""
+    true = perf_model.TPU_V5E.clone(c_edges=7.0, c_edges_big=19.0,
+                                    c_vertices=3.0, c_store=2.0,
+                                    t_const=4e-5, combine="sum")
+    rows, kinds, ys = _synth_samples(store, geom, true)
+    cal = Calibrator()
+    for r, k, y in zip(rows, kinds, ys):
+        cal.add_lane(r, k, y)
+    assert cal.ready()
+    fit = cal.fit(perf_model.TPU_V5E)
+    assert fit is not None and fit.ok, fit.diag
+    assert fit.hw.combine == "sum"
+    coef = np.array([fit.hw.c_edges, fit.hw.c_edges_big or fit.hw.c_edges,
+                     fit.hw.c_vertices, fit.hw.c_compute, fit.hw.c_store,
+                     max(fit.hw.t_const, 0.0)])
+    pred = np.array([r @ coef for r in rows])
+    np.testing.assert_allclose(pred, ys, rtol=0.02)
+    # diagnostics are reported
+    assert fit.diag["n"] == len(rows)
+    assert fit.diag["residual_rel"] < 0.02
+    assert "cond" in fit.diag
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_calibration_recovers_under_noise(store, geom, seed):
+    """10% multiplicative timing noise: predictions stay within ~15%
+    of the noiseless ground truth."""
+    true = perf_model.TPU_V5E.clone(c_edges=5.0, c_vertices=2.0,
+                                    c_store=1.5, t_const=2e-5,
+                                    combine="sum")
+    rows, kinds, ys_clean = _synth_samples(store, geom, true)
+    _, _, ys_noisy = _synth_samples(store, geom, true, noise=0.10,
+                                    seed=seed)
+    hw, diag = perf_model.fit_terms(rows, ys_noisy, perf_model.TPU_V5E)
+    assert diag["fallback"] is None, diag
+    coef = np.array([hw.c_edges, hw.c_edges_big or hw.c_edges,
+                     hw.c_vertices, hw.c_compute, hw.c_store,
+                     max(hw.t_const, 0.0)])
+    pred = np.array([np.asarray(r) @ coef for r in rows])
+    rel = np.abs(pred - np.asarray(ys_clean)) / np.asarray(ys_clean)
+    assert np.median(rel) < 0.15, np.median(rel)
+
+
+def test_calibration_noise_property(store, geom):
+    """Hypothesis property: any bounded multiplicative noise level up to
+    20% keeps the guarded fit from falling back, and predictions track
+    ground truth. Skips when hypothesis is not installed."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    true = perf_model.TPU_V5E.clone(c_edges=4.0, c_vertices=2.5,
+                                    c_store=1.2, t_const=1e-5,
+                                    combine="sum")
+    rows, kinds, _ = _synth_samples(store, geom, true)
+
+    @settings(max_examples=15, deadline=None)
+    @given(noise=st.floats(0.0, 0.2), seed=st.integers(0, 2**16))
+    def prop(noise, seed):
+        _, _, ys = _synth_samples(store, geom, true, noise=noise or None,
+                                  seed=seed)
+        hw, diag = perf_model.fit_terms(rows, ys, perf_model.TPU_V5E)
+        assert diag["fallback"] is None
+        coef = np.array([hw.c_edges, hw.c_edges_big or hw.c_edges,
+                         hw.c_vertices, hw.c_compute, hw.c_store,
+                         max(hw.t_const, 0.0)])
+        pred = np.array([np.asarray(r) @ coef for r in rows])
+        rel = np.median(np.abs(pred - ys) / np.maximum(ys, 1e-12))
+        assert rel < 0.25, rel
+
+    prop()
+
+
+def test_underdetermined_fit_keeps_prior(store, geom):
+    """Too few samples must NOT silently zero the coefficients: the fit
+    falls back to the prior and says so in the diagnostics."""
+    prior = perf_model.TPU_V5E.clone(c_edges=123.0, c_vertices=7.0)
+    info = next(i for i in store.infos if i.num_edges > 0)
+    row = perf_model.feature_row(info, geom, "little", perf_model.TPU_V5E)
+    hw, diag = perf_model.fit_terms([row], [1e-3], prior)
+    assert diag["fallback"] == "insufficient_samples"
+    assert hw.c_edges == prior.c_edges          # untouched
+    assert hw.c_vertices == prior.c_vertices
+    assert hw.combine == prior.combine          # no partial application
+    # Calibrator-level: below min_samples -> no fit at all
+    cal = Calibrator(min_samples=6)
+    cal.add_lane(row, "little", 1e-3)
+    assert cal.fit(prior) is None
+
+
+def test_fit_preserves_big_share_sentinel(store, geom):
+    """Little-only samples with the c_edges_big=0 share sentinel: the
+    fitted HW must keep the sentinel (so Big keeps sharing the fitted
+    c_edges) instead of materializing a stale absolute prior."""
+    true = perf_model.TPU_V5E.clone(c_edges=9.0, combine="sum")
+    rows, kinds, ys = [], [], []
+    for info in [i for i in store.infos if i.num_edges > 0]:
+        for _ in range(3):
+            r = np.asarray(perf_model.feature_row(info, geom, "little",
+                                                  perf_model.TPU_V5E))
+            rows.append(r)
+            kinds.append("little")
+            ys.append(float(r @ np.array([9.0, 0, 1, 1, 1, 5e-6])))
+    hw, diag = perf_model.fit_terms(rows, ys, perf_model.TPU_V5E)
+    assert diag["fallback"] is None
+    assert "c_edges_big" in diag["kept_prior"]
+    assert hw.c_edges_big == 0.0                # sentinel, not 1.0
+
+
+def test_high_residual_falls_back(store, geom):
+    """Timings that the model structurally cannot explain (random) must
+    be rejected, keeping the prior."""
+    rng = np.random.default_rng(0)
+    rows, _, _ = _synth_samples(store, geom, perf_model.TPU_V5E)
+    ys = [float(rng.uniform(1.0, 100.0)) for _ in rows]   # pure noise, huge
+    prior = perf_model.TPU_V5E.clone(c_edges=5.0)
+    hw, diag = perf_model.fit_terms(rows, ys, prior, max_residual=0.05)
+    assert diag["fallback"] == "high_residual"
+    assert hw.c_edges == prior.c_edges
+
+
+# ------------------------------------------------------- device specs
+def test_spec_registry_round_trip(tmp_path, geom):
+    reg = SpecRegistry(root=str(tmp_path))
+    hw = perf_model.TPU_V5E.clone(c_edges=3.25, vmem_lane_budget=16e6,
+                                  combine="sum")
+    spec = DeviceSpec(device_kind="cpu@test", geom_key=geometry_key(geom),
+                      hw=hw, version=3, created_at=time.time() - 60,
+                      source="calibrated", fit={"residual_rel": 0.01})
+    path = reg.put(spec)
+    assert os.path.exists(path)
+    back = reg.get("cpu@test", geom)
+    assert back is not None
+    assert back.version == 3 and back.source == "calibrated"
+    assert back.hw == hw                         # full HW round-trips
+    assert 50 < back.age_s() < 3600
+    assert back.fit["residual_rel"] == 0.01
+    # different geometry -> different spec file -> miss
+    other = Geometry(U=1024, W=512, T=512, E_BLK=128, big_batch=4)
+    assert reg.get("cpu@test", other) is None
+
+
+def test_spec_registry_corrupt_and_env(tmp_path, geom, monkeypatch):
+    reg = SpecRegistry(root=str(tmp_path))
+    p = reg.path_for("k", geom)
+    os.makedirs(str(tmp_path), exist_ok=True)
+    with open(p, "w") as f:
+        f.write("{not json")
+    assert reg.get("k", geom) is None            # degrade, don't raise
+    # REGRAPH_SPEC_DIR steers the default root
+    monkeypatch.setenv("REGRAPH_SPEC_DIR", str(tmp_path / "envdir"))
+    assert SpecRegistry().root == str(tmp_path / "envdir")
+
+
+def test_hw_dict_tolerant():
+    d = hw_to_dict(perf_model.TPU_V5E.clone(c_edges=2.0))
+    d["unknown_future_field"] = 42
+    del d["c_store"]
+    base = perf_model.TPU_V5E.clone(c_store=9.0)
+    hw = hw_from_dict(d, base=base)
+    assert hw.c_edges == 2.0
+    assert hw.c_store == 9.0                     # missing -> base
+    assert not hasattr(hw, "unknown_future_field")
+
+
+def test_default_device_kind_stable():
+    k1, k2 = default_device_kind(), default_device_kind()
+    assert k1 == k2 and "@" in k1
+
+
+# ------------------------------------------------- VMEM-pressure chunking
+def test_vmem_chunking_bit_identical(graph, geom):
+    store = GraphStore(graph, geom=geom)
+    base = api.compile(None, "pagerank", store=store, n_lanes=2)
+    hw_budget = perf_model.TPU_V5E.clone(vmem_lane_budget=4096.0)
+    tight = api.compile(None, "pagerank", store=store,
+                        config=PlanConfig(n_lanes=2, hw=hw_budget))
+    n_base = sum(len(l) for l in base.executor.packed_lanes)
+    n_tight = sum(len(l) for l in tight.executor.packed_lanes)
+    assert n_tight >= n_base          # chunking only ever adds payloads
+    # every chunked payload respects entry-boundary working sets where
+    # possible (single oversized entries still form their own chunk)
+    r_base, _ = base.run(max_iters=5)
+    r_tight, _ = tight.run(max_iters=5)
+    assert np.array_equal(r_base, r_tight)       # bit-identical
+
+
+def test_vmem_chunking_splits_budget(graph, geom):
+    store = GraphStore(graph, geom=geom)
+    bundle = store.plan(PlanConfig(n_lanes=1))
+    lane = max(bundle.plan.lanes, key=len)
+    # replicate _pack_lane_np's grouping to reach the host entry dicts
+    groups = {"little": [], "big": []}
+    for e in lane:
+        work = (bundle.little_works[e.work_id] if e.kind == "little"
+                else bundle.big_works[e.work_id])
+        p = ops._entry_np(work, e.block_lo, e.block_hi)
+        if p is not None:
+            groups[e.kind].append(p)
+    entries = max(groups.values(), key=len)
+    assert len(entries) >= 2, "fixture graph should span partitions"
+    full = ops.estimate_working_set(entries, geom)
+    assert full > 0
+    assert ops._chunk_entries(entries, geom, 0.0) == [entries]  # off
+    halves = ops._chunk_entries(entries, geom, full / 2)
+    assert len(halves) >= 2
+    assert sum(len(c) for c in halves) == len(entries)   # nothing dropped
+    for chunk in halves:
+        if len(chunk) > 1:      # single oversized entries are the floor
+            assert ops.estimate_working_set(chunk, geom) <= full / 2
+    # the packed-payload count grows accordingly, via the public path
+    one = ops._pack_lane_np(lane, bundle.little_works, bundle.big_works)
+    capped = ops._pack_lane_np(lane, bundle.little_works, bundle.big_works,
+                               max_working_set=full / 2)
+    assert len(capped) > len(one)
+
+
+# ------------------------------------------------- candidate plan search
+def test_candidate_configs_cover_split_sweep():
+    base = PlanConfig(mode="model", n_lanes=4)
+    hw = perf_model.TPU_V5E.clone(c_edges=2.0)
+    cands = candidate_configs(base, hw)
+    modes = [(c.mode, c.forced_little, c.forced_big) for c in cands]
+    assert ("model", 0, 0) in modes
+    for m in range(1, 4):
+        assert ("fixed", m, 4 - m) in modes
+    assert all(c.hw is hw for c in cands)
+    assert not any(c.mode == "monolithic" for c in cands)
+    assert any(c.mode == "monolithic"
+               for c in candidate_configs(base, hw, include_monolithic=True))
+
+
+def test_search_plan_picks_minimum(store):
+    hw = perf_model.TPU_V5E.clone(c_edges=3.0, combine="sum")
+    best_cfg, best_bundle, scores = search_plan(
+        store, PlanConfig(n_lanes=4), hw)
+    assert len(scores) == 4                      # model + 3 fixed splits
+    best_est = float(best_bundle.plan.est_makespan)
+    assert best_est == pytest.approx(min(s["est_makespan"] for s in scores))
+    assert best_cfg.hw is hw
+
+
+def test_store_adopt_plan_atomic_swap(store):
+    from repro.core.planner import Planner
+    cfg = PlanConfig(n_lanes=3, hw=perf_model.TPU_V5E.clone(c_edges=1.7))
+    assert not store.has_plan(cfg)
+    bundle = Planner(store, cfg).build()         # built OUTSIDE the cache
+    store.adopt_plan(bundle)
+    assert store.has_plan(cfg)
+    assert store.plan(cfg) is bundle             # the exact adopted object
+
+
+# ------------------------------------------------- the loop, end to end
+def _mk_tuner(**kw):
+    kw.setdefault("policy", RetunePolicy(drift_threshold=1.2,
+                                         min_samples=4, cooldown_s=0.0))
+    kw.setdefault("registry", False)
+    return AutoTuner(**kw)
+
+
+def test_forced_retune_swaps_plan_bit_identically(store, geom):
+    app = gas.make_pagerank(max_iters=4)
+    cfg = PlanConfig(mode="model", n_lanes=2)
+    tuner = _mk_tuner()
+    bundle_a = store.plan(cfg)
+    ex_a = Executor(store, bundle_a, app, calibrator=tuner.calibrator)
+    res_a, _ = ex_a.run()
+    event = tuner.retune(store, ex_a, cfg, force=True)
+    assert event["applied"], event
+    assert tuner.version == 1
+    assert tuner.hw is not None and tuner.hw.combine == "sum"
+    assert event["chosen"]["est_makespan"] == pytest.approx(
+        min(c["est_makespan"] for c in event["candidates"]))
+    # the winner was adopted into the plan LRU: resolving + planning is
+    # a pure cache hit returning the exact swapped-in bundle
+    cfg_b = tuner.resolve_config(PlanConfig(mode="model", n_lanes=2))
+    assert cfg_b.hw is tuner.hw
+    assert store.has_plan(cfg_b)
+    bundle_b = store.plan(cfg_b)
+    res_b, _ = Executor(store, bundle_b, app).run()
+    assert np.array_equal(res_a, res_b)          # replan != new semantics
+
+
+def test_resolve_config_respects_user_hw():
+    tuner = _mk_tuner()
+    tuner.hw = perf_model.TPU_V5E.clone(c_edges=5.0)
+    custom = PlanConfig(hw=perf_model.TPU_V5E.clone(c_edges=0.5))
+    assert tuner.resolve_config(custom) is custom       # untouched
+    scaled = PlanConfig(hw=perf_model.TPU_V5E_SCALED)
+    assert tuner.resolve_config(scaled) is scaled
+    default = PlanConfig()
+    assert tuner.resolve_config(default).hw is tuner.hw
+
+
+def test_retune_cooldown_and_hysteresis(store):
+    tuner = _mk_tuner(policy=RetunePolicy(drift_threshold=1.5,
+                                          min_samples=2, cooldown_s=3600.0,
+                                          hysteresis=2.0))
+    for _ in range(4):
+        tuner.drift.add("makespan", 1e-3, 1e-1)   # 100x drift
+    assert tuner.should_retune() is not None
+    tuner._last_retune_mono = time.monotonic()    # as if one just ran
+    assert tuner.should_retune() is None          # cooldown holds
+    # hysteresis: after a retune (disarmed), drift must exceed the
+    # WIDENED band to trip again
+    tuner2 = _mk_tuner(policy=RetunePolicy(drift_threshold=1.5,
+                                           min_samples=2, cooldown_s=0.0,
+                                           hysteresis=3.0))
+    tuner2._armed = False
+    for _ in range(4):
+        tuner2.drift.add("makespan", 1e-3, 2e-3)  # 2.0x: in widened band
+    assert tuner2.should_retune() is None
+    for _ in range(8):
+        tuner2.drift.add("makespan", 1e-3, 8e-3)  # 8x: beyond 1.5*3.0
+    assert tuner2.should_retune() is not None
+
+
+def test_spec_persist_and_reload_across_tuners(store, geom, tmp_path):
+    reg = SpecRegistry(root=str(tmp_path))
+    app = gas.make_pagerank(max_iters=3)
+    cfg = PlanConfig(n_lanes=2)
+    tuner = _mk_tuner(registry=reg, device_kind="cpu@test")
+    ex = Executor(store, store.plan(cfg), app, calibrator=tuner.calibrator)
+    ex.run()
+    event = tuner.retune(store, ex, cfg, force=True)
+    assert event["applied"] and event["spec_path"]
+    with open(event["spec_path"]) as f:
+        on_disk = json.load(f)
+    assert on_disk["version"] == 1 and on_disk["source"] == "calibrated"
+    # a fresh tuner (fresh process analogue) starts from the calibration
+    tuner2 = AutoTuner(registry=reg, device_kind="cpu@test")
+    spec = tuner2.load(geom)
+    assert spec is not None and tuner2.version == 1
+    assert tuner2.hw == tuner.hw
+
+
+def test_service_drift_triggered_retune(graph, geom):
+    tuner = _mk_tuner()
+    svc = GraphService(default_geom=geom, default_path="ref",
+                       autotune=tuner)
+    try:
+        svc.register(graph)
+        r0, _ = svc.submit(graph, "pagerank").result(timeout=WAIT)
+        deadline = time.monotonic() + WAIT
+        while tuner.retunes == 0 and time.monotonic() < deadline:
+            if any("error" in e or e.get("rejected")
+                   for e in tuner.events):
+                break
+            time.sleep(0.1)
+        assert tuner.retunes >= 1, tuner.events   # analytic HW on a CPU
+        assert tuner.version >= 1
+        r1, _ = svc.submit(graph, "pagerank").result(timeout=WAIT)
+        assert np.array_equal(r0, r1)             # swap is invisible
+        st = svc.stats()
+        assert st["autotune"]["retunes"] >= 1
+        assert st["service"]["calibration"]["version"] >= 1
+        prom = svc.metrics.render_prometheus()
+        assert "regraph_retunes_total" in prom
+        assert "regraph_calibration_version" in prom
+        assert "regraph_calibration_age_seconds" in prom
+    finally:
+        svc.close()
+
+
+def test_service_retune_now_and_control_plane(graph, geom):
+    from repro.control import ControlPlane
+    tuner = _mk_tuner()
+    svc = GraphService(default_geom=geom, default_path="ref",
+                       autotune=tuner)
+    cp = ControlPlane(svc)
+    try:
+        svc.register(graph)
+        rec = cp.retune_job(graph)
+        assert str(rec.state).lower().endswith("done")
+        assert rec.metrics["applied"] is True
+        assert tuner.retunes == 1
+        assert svc.metrics.retunes == 1
+        snap = cp.metrics_snapshot()
+        assert snap["autotune"]["version"] == 1
+    finally:
+        cp.close()
+
+
+def test_service_without_autotune_unchanged(graph, geom):
+    svc = GraphService(default_geom=geom, default_path="ref")
+    try:
+        svc.register(graph)
+        svc.submit(graph, "pagerank").result(timeout=WAIT)
+        assert svc.stats()["autotune"] is None
+        assert svc.stats()["service"]["calibration"] is None
+        with pytest.raises(RuntimeError):
+            svc.retune_now(graph)
+    finally:
+        svc.close()
+
+
+def test_serial_host_makespan_estimate(store):
+    """combine="sum" executors compare measured iterations against the
+    SUM of lane estimates (lanes run back-to-back on the host), not the
+    parallel-lanes plan makespan."""
+    cfg_sum = PlanConfig(n_lanes=2,
+                         hw=perf_model.TPU_V5E.clone(c_edges=2.0,
+                                                     combine="sum"))
+    app = gas.make_pagerank(max_iters=2)
+    ex = Executor(store, store.plan(cfg_sum), app)
+    lane_sum = sum(e for e, _ in ex._lane_est)
+    assert ex._est_iteration == pytest.approx(lane_sum)
+    ex2 = Executor(store, store.plan(PlanConfig(n_lanes=2)), app)
+    assert ex2._est_iteration == ex2.plan.est_makespan
