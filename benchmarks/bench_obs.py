@@ -32,7 +32,7 @@ from repro import api
 from repro.graphs import datasets
 from repro.obs import Tracer
 
-from .common import GEOM, emit, store_for
+from .common import GEOM, cpu_calibrated_hw, emit, store_for
 
 # coarse spans must be invisible at request granularity
 GATE_COARSE = 1.05
@@ -63,11 +63,19 @@ def run(graphs=None, rounds=15, iters=2, out_json="BENCH_obs.json"):
     for name in graphs:
         g = datasets.load(name)
         store = store_for(g)
+        # calibrated constants, not the analytic TPU defaults: the
+        # drift_kinds block this artifact reports is meaningless (and
+        # alarming — thousands-of-x "drift") when the estimates come
+        # from a device profile this host doesn't have
+        hw, _ = cpu_calibrated_hw(store)
         # three executors over the SAME cached plan: the comparison is
         # about the run path, not plan/build work
-        c_off = api.compile(None, "pagerank", store=store, n_lanes=4)
-        c_coarse = api.compile(None, "pagerank", store=store, n_lanes=4)
-        c_lane = api.compile(None, "pagerank", store=store, n_lanes=4)
+        c_off = api.compile(None, "pagerank", store=store, n_lanes=4,
+                            hw=hw)
+        c_coarse = api.compile(None, "pagerank", store=store, n_lanes=4,
+                               hw=hw)
+        c_lane = api.compile(None, "pagerank", store=store, n_lanes=4,
+                             hw=hw)
         tr_coarse = Tracer(lane_detail=False)
         tr_lane = Tracer(lane_detail=True)
         # warm every path (compiles its jits) before any timed round

@@ -77,7 +77,8 @@ from .core.planner import PlanBundle, PlanConfig, Planner
 from .core.store import GraphStore
 from .core.types import Geometry, SchedulePlan
 from .graphs.formats import Graph, fingerprint as graph_fingerprint
-from .obs import DriftAccumulator, Span, SpanContext, Tracer
+from .obs import (DriftAccumulator, LaneFootprint, PerfLedger, Span,
+                  SpanContext, Tracer, UtilizationAccumulator)
 from .serve_graph import (GraphService, GraphStoreCache, RequestHandle,
                           ServiceMetrics, UpdateResult)
 from .sharding import (LanePlacement, ShardedExecutor, ShardedLanes,
@@ -91,12 +92,14 @@ __all__ = [
     "ControlPlane", "DeadlineExpired", "DeviceSpec",
     "DriftAccumulator", "Executor", "GASApp", "Geometry", "GraphDelta",
     "GraphService", "GraphStore", "GraphStoreCache", "HW", "JobRecord",
-    "JobScheduler", "JobStore", "LanePlacement", "PlanBundle",
+    "JobScheduler", "JobStore", "LaneFootprint", "LanePlacement",
+    "PerfLedger", "PlanBundle",
     "PlanConfig", "Planner", "QueueFull", "QuotaExceeded", "RejectedJob",
     "RequestHandle", "RetunePolicy", "SchedulePlan", "ServiceMetrics",
     "ShardedExecutor", "SpecRegistry",
     "ShardedLanes", "Span", "SpanContext", "TPU_V5E", "TPU_V5E_SCALED",
-    "TenantQuota", "Tracer", "UpdateResult", "WorkerCrashed",
+    "TenantQuota", "Tracer", "UpdateResult",
+    "UtilizationAccumulator", "WorkerCrashed",
     "WorkerPool", "apply_delta", "apply_delta_to_graph",
     "chain_fingerprint", "compile", "graph_fingerprint", "make_bfs",
     "make_closeness", "make_delta", "make_pagerank", "make_sssp",

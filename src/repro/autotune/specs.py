@@ -81,6 +81,16 @@ class DeviceSpec:
     source: str = "analytic"       # "analytic" | "calibrated" | "bench"
     fit: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
+    @property
+    def peak_bandwidth_gbps(self) -> float:
+        """The %-of-peak denominator this spec implies: the explicit
+        calibrated ``HW.peak_bandwidth_gbps`` when set, else the
+        bandwidth the fitted stream terms believe in
+        (:func:`~repro.core.perf_model.effective_peak_bandwidth_bps`).
+        The utilization profiler and the dashboard read peaks through
+        this so persisted specs and live executors agree."""
+        return perf_model.effective_peak_bandwidth_bps(self.hw) / 1e9
+
     def age_s(self, now: Optional[float] = None) -> float:
         if self.created_at <= 0:
             return float("inf")

@@ -25,7 +25,13 @@ Endpoints (all JSON unless noted):
   until the job has a trace or after the tracer evicted it.
 * ``POST /jobs/{id}/cancel`` — cancel a queued job.
 * ``GET /metrics`` — Prometheus text; ``GET /metrics.json`` — the full
-  merged snapshot. ``GET /healthz`` — liveness.
+  merged snapshot. ``GET /healthz`` — liveness; ``GET /readyz`` —
+  readiness (200 only while the scheduler accepts submissions and all
+  pool workers are alive, 503 otherwise — the load-balancer signal).
+* ``GET /dashboard`` — self-contained HTML ops page (stdlib-served,
+  no assets) that polls ``/metrics.json``: queue depth, per-stage
+  latency percentiles, perf-model drift, retunes, and the per-lane
+  pipeline-utilization bars.
 
 Built on :class:`http.server.ThreadingHTTPServer` — no dependencies,
 one daemon thread per connection, fine for the control plane's request
@@ -89,6 +95,13 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             if url.path == "/healthz":
                 return self._json(200, {"status": "ok"})
+            if url.path == "/readyz":
+                info = self.plane.ready()
+                return self._json(200 if info["ready"] else 503, info)
+            if url.path == "/dashboard":
+                from .dashboard import DASHBOARD_HTML
+                return self._text(200, DASHBOARD_HTML,
+                                  ctype="text/html; charset=utf-8")
             if url.path == "/metrics":
                 return self._text(200, self.plane.prometheus())
             if url.path == "/metrics.json":

@@ -8,8 +8,10 @@ Every submitted job gets a :class:`JobRecord` that tracks its lifecycle
                     \\→ cancelled
     (rejected: refused at admission, never queued)
 
-with a per-stage timestamp for each transition, a bounded log buffer,
-and — once terminal — the request's latency/cache metrics. The
+with a per-stage timestamp for each transition, a bounded log buffer
+(each line stamped ``[<epoch seconds>] <LEVEL> <message>`` so lines
+from different processes/machines sort and diff without timezone
+games), and — once terminal — the request's latency/cache metrics. The
 :class:`JobStore` holds the records thread-safely, bounds retention by
 evicting the oldest *terminal* records, serves chunked log reads for
 the HTTP API's streaming endpoint, and can mirror terminal records to
@@ -134,8 +136,9 @@ class JobStore:
             self._records[jid] = rec
             self._dropped[jid] = 0
             self._evict_locked()
-            rec.logs.append(f"[{_ts()}] submitted app={app} "
-                            f"tenant={tenant} priority={priority}")
+            self._append_log_locked(
+                rec, f"submitted app={app} tenant={tenant} "
+                     f"priority={priority}")
             return rec
 
     def transition(self, job_id: str, state: str,
@@ -162,8 +165,10 @@ class JobStore:
                 rec.error = error
             if metrics is not None:
                 rec.metrics = metrics
-            self._append_log_locked(rec, log if log is not None
-                                    else f"-> {state}")
+            self._append_log_locked(
+                rec, log if log is not None else f"-> {state}",
+                level=("error" if error is not None
+                       or state == JobState.FAILED else "info"))
             if state in JobState.TERMINAL and self.persist_path:
                 persist = rec.to_dict(with_logs=True)
         if persist is not None:
@@ -189,16 +194,20 @@ class JobStore:
                 self._append_log_locked(
                     rec, "coalesced onto an identical in-flight job")
 
-    def append_log(self, job_id: str, line: str) -> None:
+    def append_log(self, job_id: str, line: str,
+                   level: str = "info") -> None:
         with self._lock:
             rec = self._records.get(job_id)
             if rec is not None:
-                self._append_log_locked(rec, line)
+                self._append_log_locked(rec, line, level=level)
 
-    def _append_log_locked(self, rec: JobRecord, line: str) -> None:
+    def _append_log_locked(self, rec: JobRecord, line: str,
+                           level: str = "info") -> None:
+        # lines stay plain strings (streamed verbatim over the chunked
+        # /logs endpoint): epoch-seconds stamp + upper-case level prefix
         if len(rec.logs) == rec.logs.maxlen:
             self._dropped[rec.id] = self._dropped.get(rec.id, 0) + 1
-        rec.logs.append(f"[{_ts()}] {line}")
+        rec.logs.append(f"[{time.time():.3f}] {level.upper()} {line}")
 
     # -- queries --------------------------------------------------------
     def get(self, job_id: str) -> Optional[JobRecord]:
@@ -258,7 +267,3 @@ class JobStore:
                 f.write(json.dumps(record_dict, default=str) + "\n")
         except OSError:
             pass    # history is best-effort; serving must not fail on it
-
-
-def _ts() -> str:
-    return time.strftime("%H:%M:%S", time.localtime())

@@ -233,6 +233,23 @@ class ControlPlane:
         snap["jobs"] = self.jobs.stats()
         return snap
 
+    def ready(self) -> dict:
+        """Readiness probe body for ``GET /readyz``: the plane can take
+        and execute work — the scheduler is accepting submissions AND
+        (when a process pool exists) every pool worker slot is usable.
+        Liveness (``/healthz``) stays unconditional; this is the
+        load-balancer signal to stop routing before close()."""
+        accepting = self.service.accepting
+        pool = self.service._pool
+        pool_alive = pool.alive() if pool is not None else True
+        return {
+            "ready": bool(accepting and pool_alive),
+            "scheduler_accepting": bool(accepting),
+            "pool_alive": bool(pool_alive),
+            "queue_depth": int(
+                self.service._scheduler.stats()["depth"]),
+        }
+
     def trace(self, job_id: str) -> Optional[dict]:
         """The job's distributed trace as a Chrome-trace dict (load it
         at ``chrome://tracing`` or https://ui.perfetto.dev), or None if

@@ -278,6 +278,19 @@ class WorkerPool:
         assert status == "ok"
         return (res, spans) if trace else res
 
+    def alive(self) -> bool:
+        """True while every worker slot is usable: the pool is open and
+        no executor is broken awaiting its next-job respawn. The pool
+        half of the control plane's readiness probe — a crashed slot
+        flips this False only for the instant before ``_run`` respawns
+        it, so a persistent False means the pool is closed or a respawn
+        failed."""
+        with self._lock:
+            if self._closed:
+                return False
+            return all(not getattr(ex, "_broken", False)
+                       for ex in self._execs)
+
     # -- lifecycle ------------------------------------------------------
     def close(self, wait: bool = True) -> None:
         with self._lock:

@@ -101,7 +101,9 @@ class Executor:
     def __init__(self, store, bundle: PlanBundle, app: GASApp,
                  path: Optional[str] = None, fuse_lanes: bool = True,
                  drift_parent: Optional[obs.DriftAccumulator] = None,
-                 calibrator=None):
+                 calibrator=None,
+                 util_parent: Optional[obs.UtilizationAccumulator] = None,
+                 profile: bool = True):
         self.store = store
         self.bundle = bundle
         self.app = app
@@ -112,6 +114,16 @@ class Executor:
         # measured-vs-model drift; chains to the service-level
         # accumulator when this executor runs under a GraphService
         self.drift = obs.DriftAccumulator(parent=drift_parent)
+        # pipeline utilization profiler (repro.obs.profile): analytic
+        # lane footprints × measured lane times → achieved GB/s and
+        # %-of-peak; chains to the service-level accumulator like drift.
+        # profile=False skips footprint derivation and sampling entirely
+        # (the A/B knob bench_profile's overhead gate exercises).
+        self.profile = bool(profile)
+        self.util = obs.UtilizationAccumulator(parent=util_parent)
+        self._peak_bps = perf_model.effective_peak_bandwidth_bps(
+            bundle.config.hw)
+        self._footprints = None  # lazy obs.lane_footprints
         self._lane_est = perf_model.lane_estimates(bundle.plan)
         # the estimate a measured iteration is compared against for the
         # "makespan" drift kind: plan.est_makespan assumes lanes run in
@@ -161,6 +173,37 @@ class Executor:
     @property
     def accum_dtype(self):
         return jnp.int32 if self.app.gather == "or" else jnp.float32
+
+    def footprints(self):
+        """Per-lane analytic :class:`~repro.obs.profile.LaneFootprint`
+        (None for snapped-away lanes), derived once from the payload
+        structure this executor actually runs — the byte model the
+        utilization samples and ``jaxpr_lane_bytes`` validation share."""
+        if self._footprints is None:
+            lanes = (self.packed_lanes if self.fuse_lanes
+                     else self.bundle.lane_entries())
+            self._footprints = obs.lane_footprints(lanes, self.V_pad)
+        return self._footprints
+
+    def _util_add(self, lane_idx: int, kind: str, measured_s: float,
+                  span=None):
+        """Fold one measured lane execution into the utilization
+        accumulator (and onto the live ``executor.lane`` span when one
+        is open). No-op with ``profile=False``."""
+        if not self.profile:
+            return None
+        fps = self.footprints()
+        fp = fps[lane_idx] if lane_idx < len(fps) else None
+        if fp is None:
+            return None
+        gbps = (fp.hbm_bytes / measured_s / 1e9 if measured_s > 0
+                else 0.0)
+        if span is not None:
+            span.set(hbm_bytes=fp.hbm_bytes, flops=fp.flops,
+                     gbps=round(gbps, 3))
+        self.util.add(fp.kind, fp.hbm_bytes, fp.flops, measured_s,
+                      peak_bps=self._peak_bps, lane=lane_idx)
+        return gbps
 
     def _run_payload(self, payload, vprops):
         """Dispatch one device payload (packed lane or single entry)."""
@@ -248,10 +291,14 @@ class Executor:
                              if li < len(self.plan.lanes) else 0)
                 with obs.span("executor.lane", "executor", lane=li,
                               kind=kind_i, est_time=e_i,
-                              n_entries=n_entries):
+                              n_entries=n_entries) as lane_sp:
                     lane_out = f(vprops)
                     jax.block_until_ready(lane_out)
-                measured = time.perf_counter() - t0
+                    measured = time.perf_counter() - t0
+                    # achieved-bandwidth counters ride on the span the
+                    # trace already carries (bytes are analytic, so the
+                    # only run-path cost is the divide + dict update)
+                    self._util_add(li, kind_i, measured, span=lane_sp)
                 self.drift.add(kind_i, e_i, measured)
                 self._calib_add(li, kind_i, measured)
                 outs.extend(lane_out)
@@ -357,11 +404,12 @@ class Executor:
                 ts.append(time.perf_counter() - t0)
             med = float(np.median(ts))
             out.append(med)
-            # every calibration sweep is also a drift sample
+            # every calibration sweep is also a drift + utilization sample
             if i < len(self._lane_est):
                 e_i, kind_i = self._lane_est[i]
                 self.drift.add(kind_i, e_i, med)
                 self._calib_add(i, kind_i, med)
+                self._util_add(i, kind_i, med)
         return out
 
     def _calib_add(self, lane_idx: int, kind: str, measured_s: float):
@@ -415,6 +463,20 @@ class Executor:
             "t_trace_ms": t_trace * 1e3,
         }
 
+    def utilization(self) -> dict:
+        """The pipeline-utilization report: the accumulator's per-kind
+        achieved GB/s / %-of-peak / intensity plus this executor's
+        static per-lane footprints and bandwidth ceiling. Empty
+        ``kinds``/``lanes`` until a traced run or ``time_lanes`` sweep
+        has produced measured samples."""
+        rep = self.util.report()
+        rep["peak_bandwidth_gbps"] = self._peak_bps / 1e9
+        rep["profile"] = self.profile
+        rep["footprints"] = [fp.as_dict() if fp is not None else None
+                             for fp in (self.footprints()
+                                        if self.profile else [])]
+        return rep
+
     def stats(self) -> dict:
         b, store = self.bundle, self.store
         padded_edges = sum(p["n_blocks"] for p in self._payloads) \
@@ -439,5 +501,6 @@ class Executor:
             "padding_efficiency": (real_edges / padded_edges
                                    if padded_edges else 1.0),
             "drift": self.drift.report(),
+            "utilization": self.utilization(),
             **self.dispatch_stats(),
         }

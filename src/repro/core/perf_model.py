@@ -51,6 +51,12 @@ class HW:
     # bit-identical, just more launches. Device specs set this (guide:
     # ~16 MB VMEM per TPU core); the analytic default leaves it off.
     vmem_lane_budget: float = 0.0
+    # achievable device bandwidth in GB/s, the denominator of the
+    # utilization profiler's %-of-peak (repro.obs.profile). 0 = derive
+    # from the stream terms via effective_peak_bandwidth_bps(); set
+    # explicitly by calibration (bench specs, retuner) so it persists
+    # through the autotune spec registry.
+    peak_bandwidth_gbps: float = 0.0
 
     def clone(self, **kw) -> "HW":
         return dataclasses.replace(self, **kw)
@@ -66,6 +72,18 @@ TPU_V5E_SCALED = HW(bw_hbm=819e9 / 100, mac_rate=98.5e12 / 100,
                     vpu_rate=2.5e12 / 100, gather_a=64.0 / 819e9 * 100)
 S_EDGE = 12          # src + dst + weight, 4 B each
 S_PROP = 4           # scalar f32/int32 property
+
+
+def effective_peak_bandwidth_bps(hw: HW) -> float:
+    """The bandwidth ceiling (bytes/s) the utilization profiler divides
+    achieved GB/s by. An explicitly calibrated ``peak_bandwidth_gbps``
+    wins; otherwise the base stream rate deflated by the calibrated
+    edge-stream multiplier — ``c_edges`` scales modelled *time*, so the
+    bandwidth the model believes this device sustains on the dominant
+    (edge) stream is ``bw_hbm / c_edges``."""
+    if hw.peak_bandwidth_gbps > 0:
+        return hw.peak_bandwidth_gbps * 1e9
+    return hw.bw_hbm / max(hw.c_edges, 1e-9)
 
 
 def _terms(info: PartitionInfo, geom: Geometry, kind: str, hw: HW):

@@ -232,6 +232,60 @@ def estimate_working_set(entries: List[dict], geom: Geometry) -> int:
     return int(ws)
 
 
+def payload_footprint(p: dict) -> dict:
+    """Byte/FLOP accounting of ONE (packed or single-entry) payload, by
+    traffic class — the per-payload half of
+    :class:`repro.obs.profile.LaneFootprint`. All byte counts come from
+    the actual arrays (``.nbytes``), not re-derived shapes, so they are
+    exact for whatever this payload holds:
+
+    ``edge_bytes``     the streamed edge slab (src/dst/weights/valid)
+    ``index_bytes``    per-block routing metadata (window/tile ids,
+                       tile_first flags, the global tile_idx map)
+    ``table_bytes``    the deduped unique-source compaction table
+                       (Big only; :func:`_pack_group` packs shared
+                       tables once and this reads the packed array)
+    ``vertex_bytes``   property values the kernel actually reads: the
+                       gathered unique sources (Big) or the touched
+                       source windows (Little — W values per distinct
+                       window id)
+    ``tile_bytes``     the merge scatter traffic: output tiles plus the
+                       tile_idx scatter indices
+    ``flops``          one-hot gather (E·W) + router (E·T) MACs over
+                       padded edges, ×2 (multiply+add) — the numerator
+                       of arithmetic intensity
+    """
+    geom: Geometry = p["geom"]
+    nb = {k: (int(p[k].nbytes) if p.get(k) is not None
+              and hasattr(p[k], "nbytes") else 0)
+          for k in _DEVICE_KEYS}
+    edge = nb["src_local"] + nb["dst_local"] + nb["weights"] + nb["valid"]
+    index = (nb["window_id"] + nb["tile_id"] + nb["tile_first"]
+             + nb["tile_idx"])
+    table = nb["unique_src"]
+    if p["kind"] == "big":
+        # vwin = vprops[unique_src]: one property per table slot
+        vertex = (int(p["unique_src"].shape[0]) * 4
+                  if p.get("unique_src") is not None else 0)
+    else:
+        # Little streams whole windows; count each touched window once
+        wids = np.asarray(p["window_id"])
+        vertex = int(np.unique(wids).shape[0]) * geom.W * 4
+    tiles = int(p["n_out_tiles"]) * geom.T * 4 + nb["tile_idx"]
+    padded_e = int(p["n_blocks"]) * geom.E_BLK
+    return {
+        "kind": p["kind"],
+        "edge_bytes": edge,
+        "index_bytes": index,
+        "table_bytes": table,
+        "vertex_bytes": vertex,
+        "tile_bytes": tiles,
+        "flops": 2 * padded_e * (geom.W + geom.T),
+        "padded_edges": padded_e,
+        "real_edges": int(p["num_real_edges"]),
+    }
+
+
 def _chunk_entries(entries: List[dict], geom: Geometry,
                    budget: float) -> List[List[dict]]:
     """Greedily split a same-kind entry list so each chunk's estimated

@@ -11,14 +11,27 @@ did THIS request's 900 ms go?". This package adds:
 * :mod:`~repro.obs.drift` — :class:`DriftAccumulator`, aggregating
   measured-vs-model-estimated lane times into the per-pipeline-kind
   drift report that device-spec recalibration (ROADMAP item 1) needs.
+* :mod:`~repro.obs.profile` — the pipeline utilization profiler:
+  analytic per-lane byte/FLOP footprints (:class:`LaneFootprint`)
+  combined with measured lane times into achieved GB/s, arithmetic
+  intensity and %-of-peak (:class:`UtilizationAccumulator`).
+* :mod:`~repro.obs.ledger` — :class:`PerfLedger`, the append-only
+  JSONL perf-regression ledger benchmark runs write and ``run.py
+  compare`` reports on.
 
 See docs/OBSERVABILITY.md for the span taxonomy and usage.
 """
 from .drift import DriftAccumulator
+from .ledger import PerfLedger, flatten_metrics, git_sha
+from .profile import (LaneFootprint, UtilizationAccumulator,
+                      jaxpr_lane_bytes, lane_footprint, lane_footprints)
 from .trace import (NOOP_SPAN, Span, SpanContext, Tracer, current,
                     current_ctx, current_tracer, span)
 
 __all__ = [
-    "DriftAccumulator", "NOOP_SPAN", "Span", "SpanContext", "Tracer",
-    "current", "current_ctx", "current_tracer", "span",
+    "DriftAccumulator", "LaneFootprint", "NOOP_SPAN", "PerfLedger",
+    "Span", "SpanContext", "Tracer", "UtilizationAccumulator",
+    "current", "current_ctx", "current_tracer", "flatten_metrics",
+    "git_sha", "jaxpr_lane_bytes", "lane_footprint", "lane_footprints",
+    "span",
 ]

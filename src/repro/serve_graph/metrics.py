@@ -21,7 +21,7 @@ import threading
 from collections import deque
 from typing import Deque, Dict, Optional
 
-from ..obs import DriftAccumulator
+from ..obs import DriftAccumulator, UtilizationAccumulator
 
 __all__ = ["RequestMetrics", "ServiceMetrics", "merge_expositions"]
 
@@ -171,6 +171,11 @@ class ServiceMetrics:
         # service-level perf-model drift sink: executors chain their
         # per-run accumulators to this one (see repro.obs.drift)
         self.drift = DriftAccumulator()
+        # service-level pipeline-utilization sink (repro.obs.profile):
+        # executors chain their per-lane achieved-GB/s samples here the
+        # same way; feeds the regraph_lane_bandwidth_gbps /
+        # regraph_pipeline_utilization gauges and the dashboard bars
+        self.utilization = UtilizationAccumulator()
 
     def _tenant(self, tenant: str) -> Dict[str, int]:
         t = self._tenants.get(tenant)
@@ -350,6 +355,7 @@ class ServiceMetrics:
         snap["store_hit_rate"] = self.store_hit_rate
         snap["plan_hit_rate"] = self.plan_hit_rate
         snap["drift"] = self.drift.report()   # its own lock
+        snap["utilization"] = self.utilization.report()   # its own lock
         snap["calibration"] = self._calibration_info()
         return snap
 
@@ -429,6 +435,19 @@ class ServiceMetrics:
                "report, per pipeline kind.",
                [((("kind", k),), rep["n"])
                 for k, rep in sorted(drift.items())])
+        util_kinds = (snap.get("utilization") or {}).get("kinds") or {}
+        metric("lane_bandwidth_gbps", "gauge",
+               "Achieved bandwidth per pipeline kind: analytic lane "
+               "footprint bytes over measured lane seconds "
+               "(repro.obs.profile).",
+               [((("kind", k),), rep.get("gbps"))
+                for k, rep in sorted(util_kinds.items())])
+        metric("pipeline_utilization", "gauge",
+               "Achieved bandwidth as a fraction of the calibrated "
+               "device peak (HW.peak_bandwidth_gbps), per pipeline "
+               "kind.",
+               [((("kind", k),), rep.get("utilization"))
+                for k, rep in sorted(util_kinds.items())])
         metric("retunes_total", "counter",
                "Applied drift-triggered recalibrations (perf-model "
                "refit + plan re-derivation + atomic swap).",

@@ -400,6 +400,13 @@ class GraphService:
         if self._own_pool and self._pool is not None:
             self._pool.close(wait=wait)
 
+    @property
+    def accepting(self) -> bool:
+        """True while submit() would enqueue work (i.e. not closed) —
+        the scheduler half of the control plane's readiness probe."""
+        with self._lock:
+            return not self._closed
+
     # -- registration ---------------------------------------------------
     def register(self, graph: Graph, *, geom: Optional[Geometry] = None,
                  use_dbg: Optional[bool] = None,
@@ -1051,6 +1058,7 @@ class GraphService:
                     ex = Executor(store, bundle, job.make_app(),
                                   path=job.path,
                                   drift_parent=self.metrics.drift,
+                                  util_parent=self.metrics.utilization,
                                   calibrator=calib)
                 nbytes = ex.memory_footprint()
                 with self._lock:
@@ -1195,6 +1203,7 @@ class GraphService:
             ex = Executor(store, bundle, make_app(),
                           path=self.default_path,
                           drift_parent=self.metrics.drift,
+                          util_parent=self.metrics.utilization,
                           calibrator=self._autotuner.calibrator)
             event = self._autotuner.retune(store, ex, config, skey=skey,
                                            force=True)
