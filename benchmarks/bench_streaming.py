@@ -17,6 +17,12 @@ case). Acceptance target: >= 5x apply speedup at <= 1% skewed churn on
 the quick-tier RMAT graph, with untouched lanes' packed payloads reused
 (asserted from the apply stats).
 
+A third tier benchmarks grow-the-graph deltas (``grow_frac`` — new
+vertices appended to the tail of the frozen DBG id space): growth must
+never cost more than the cold rebuild it replaces (>= 1x at <= 1%
+growth) and the incrementally-grown store must be bit-identical to a
+cold build of the post-growth graph under the extended permutation.
+
 Results go to stdout AND a ``BENCH_streaming.json`` artifact.
 """
 from __future__ import annotations
@@ -38,10 +44,12 @@ from .common import emit
 # partition-count effect (hot vertices -> few dirty partitions of many)
 STREAM_GEOM = Geometry(U=512, W=256, T=256, E_BLK=256, big_batch=4)
 CHURN_LEVELS = (0.001, 0.01, 0.05)
+GROWTH_LEVELS = (0.001, 0.01)
 
 
 def run(smoke: bool = False, churn_levels=CHURN_LEVELS, repeats: int = 3,
-        n_lanes: int = 8, out_json: str = "BENCH_streaming.json"):
+        n_lanes: int = 8, out_json: str = "BENCH_streaming.json",
+        growth_levels=GROWTH_LEVELS):
     scale, ef = (12, 8) if smoke else (14, 16)
     g = rmat(scale, ef, seed=19, weighted=True)
     geom = STREAM_GEOM if not smoke else Geometry(
@@ -137,6 +145,80 @@ def run(smoke: bool = False, churn_levels=CHURN_LEVELS, repeats: int = 3,
     emit("streaming.acceptance_uniform", 0.0,
          f"worst_speedup={worst['speedup']:.2f}x (>={need_u:g}x ok, "
          f"path={worst['path']})")
+
+    # growth tier: vertex growth (tail-appended under the frozen perm)
+    # plus mild skewed churn — the evolving-graph arrival pattern. The
+    # gate is intentionally modest: growth dirties the LAST partition
+    # (plus any partition the churn touches) and allocates fresh tail
+    # partitions, so the locality win shrinks, but applying a growth
+    # delta must never cost more than the cold rebuild it replaces.
+    for gf in growth_levels:
+        delta = random_delta(g, churn=gf / 2, seed=int(gf * 1e6) + 7,
+                             hot_frac=0.01, grow_frac=gf)
+        post = apply_delta_to_graph(g, delta)        # oracle (untimed)
+
+        ta, tc = [], []
+        res = None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = apply_delta(store, delta)
+            ta.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            cold = GraphStore(post, geom=geom)
+            cold.plan(cfg).packed_lanes()
+            tc.append(time.perf_counter() - t0)
+        t_apply, t_cold = float(np.median(ta)), float(np.median(tc))
+
+        # correctness gate rides along with the timing: the grown store
+        # is bit-identical to a cold build of the post-growth graph
+        # under the extended frozen permutation
+        ext_perm = np.concatenate([
+            np.asarray(store.perm),
+            np.arange(g.num_vertices, post.num_vertices, dtype=np.int32)])
+        ext = GraphStore(post, geom=geom, perm=ext_perm)
+        for k in ("src", "dst", "weights"):
+            assert np.array_equal(res.store.edges[k], ext.edges[k]), \
+                f"grown store diverged from cold rebuild ({k})"
+        assert res.store.infos == ext.infos and res.store.V_pad == ext.V_pad
+
+        s = res.stats
+        speedup = t_cold / max(t_apply, 1e-12)
+        rec = {
+            "graph": g.name, "V": g.num_vertices, "E": g.num_edges,
+            "churn": gf / 2, "distribution": "growth",
+            "grow_frac": gf,
+            "grown_vertices": s["grown_vertices"],
+            "new_partitions": s["new_partitions"],
+            "changes": delta.num_changes,
+            "path": s["path"],
+            "dirty_fraction": s["dirty_fraction"],
+            "t_apply_ms": t_apply * 1e3,
+            "t_cold_rebuild_ms": t_cold * 1e3,
+            "speedup": speedup,
+            "dirty_partitions": s["dirty_partitions"],
+            "partitions": s["partitions"],
+            "packed_lanes_reused": s["packed_lanes_reused"],
+            "packed_lanes_repacked": s["packed_lanes_repacked"],
+            "packed_bytes_reused": s["packed_bytes_reused"],
+            "little_blockings_reused": s["little_blockings_reused"],
+        }
+        records.append(rec)
+        emit(f"streaming.growth.frac{gf:g}.apply", t_apply * 1e6,
+             f"speedup={speedup:.1f}x grown={s['grown_vertices']}V "
+             f"(+{s['new_partitions']}p, cold={t_cold * 1e3:.0f}ms)")
+
+    grow = [r for r in records
+            if r["distribution"] == "growth" and r["grow_frac"] <= 0.01]
+    assert grow, "no growth level <= 1% measured"
+    worst_g = min(grow, key=lambda r: r["speedup"])
+    assert worst_g["speedup"] >= 1.0, \
+        (f"growth apply regressed below cold rebuild: "
+         f"{worst_g['speedup']:.2f}x at grow_frac="
+         f"{worst_g['grow_frac']:g}")
+    assert all(r["grown_vertices"] > 0 for r in grow)
+    emit("streaming.acceptance_growth", 0.0,
+         f"worst_speedup={worst_g['speedup']:.2f}x (>=1x ok, "
+         f"bit-identical to cold rebuild)")
 
     if out_json:
         with open(out_json, "w") as f:

@@ -83,9 +83,11 @@ from .serve_graph import (GraphService, GraphStoreCache, RequestHandle,
                           ServiceMetrics, UpdateResult)
 from .sharding import (LanePlacement, ShardedExecutor, ShardedLanes,
                        place_lanes)
-from .streaming import (GraphDelta, apply_delta, apply_delta_to_graph,
-                        chain_fingerprint, make_delta, random_delta,
-                        rebuild_plans, splice_delta)
+from .streaming import (GraphDelta, RegroupPolicy, apply_delta,
+                        apply_delta_to_graph, chain_fingerprint,
+                        compact_deltas, compose_deltas, grouping_drift,
+                        grown_num_vertices, make_delta, random_delta,
+                        rebuild_plans, reregister, splice_delta)
 
 __all__ = [
     "AutoTuner", "BUILTIN_APPS", "Calibrator", "CompiledApp",
@@ -94,17 +96,19 @@ __all__ = [
     "GraphService", "GraphStore", "GraphStoreCache", "HW", "JobRecord",
     "JobScheduler", "JobStore", "LaneFootprint", "LanePlacement",
     "PerfLedger", "PlanBundle",
-    "PlanConfig", "Planner", "QueueFull", "QuotaExceeded", "RejectedJob",
+    "PlanConfig", "Planner", "QueueFull", "QuotaExceeded",
+    "RegroupPolicy", "RejectedJob",
     "RequestHandle", "RetunePolicy", "SchedulePlan", "ServiceMetrics",
     "ShardedExecutor", "SpecRegistry",
     "ShardedLanes", "Span", "SpanContext", "TPU_V5E", "TPU_V5E_SCALED",
     "TenantQuota", "Tracer", "UpdateResult",
     "UtilizationAccumulator", "WorkerCrashed",
     "WorkerPool", "apply_delta", "apply_delta_to_graph",
-    "chain_fingerprint", "compile", "graph_fingerprint", "make_bfs",
-    "make_closeness", "make_delta", "make_pagerank", "make_sssp",
-    "make_wcc", "place_lanes", "random_delta", "rebuild_plans",
-    "serve_jobs", "splice_delta",
+    "chain_fingerprint", "compact_deltas", "compile", "compose_deltas",
+    "graph_fingerprint", "grouping_drift", "grown_num_vertices",
+    "make_bfs", "make_closeness", "make_delta", "make_pagerank",
+    "make_sssp", "make_wcc", "place_lanes", "random_delta",
+    "rebuild_plans", "reregister", "serve_jobs", "splice_delta",
 ]
 
 

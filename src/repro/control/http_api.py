@@ -12,6 +12,25 @@ Endpoints (all JSON unless noted):
   429 with ``{"error": "queue_full" | "quota", ...}``; an unknown
   fingerprint is 404. Graph payloads never travel over HTTP — register
   graphs in-process and submit by fingerprint (jobs are keyed by it).
+
+  ``"kind"`` selects non-run jobs on the same route:
+
+  - ``{"kind": "update", "fingerprint": fp, "delta": {...}}`` — a
+    streaming delta update (synchronous; the record carries the NEW
+    chained fingerprint). The delta object takes ``add`` / ``remove``
+    / ``update`` edge lists (each ``{"src": [...], "dst": [...]}``
+    plus optional ``"weights"``, or a positional ``[src, dst,
+    weights?]`` array) and an optional vertex-growth floor
+    ``"grow_to"``; adds may reference ids past the current vertex
+    count to GROW the graph. A malformed delta — wrong shapes,
+    unknown fields, or a remove/update referencing an unknown (e.g.
+    not-yet-grown) vertex — is a typed 400 ``bad_delta``; an unknown
+    base fingerprint stays 404.
+  - ``{"kind": "compact", "fingerprint": fp}`` — squash the delta
+    chain behind a snapshot into one composed delta (lineage kept).
+  - ``{"kind": "regroup", "fingerprint": fp, "force": true}`` — run a
+    grouping-drift check and (past the threshold, or forced) the
+    fresh-DBG re-registration swap.
 * ``GET /jobs`` — list records (``?tenant=`` / ``?state=`` filters).
 * ``GET /jobs/{id}`` — one record, with logs.
 * ``GET /jobs/{id}/result?timeout=`` — block for the outcome (meta
@@ -51,6 +70,55 @@ from .scheduler import QueueFull, QuotaExceeded, RejectedJob
 __all__ = ["serve_jobs"]
 
 _JOB_PATH = re.compile(r"^/jobs/([^/]+)(/logs|/result|/cancel|/trace)?$")
+
+_DELTA_FIELDS = frozenset({"add", "remove", "update", "grow_to"})
+
+
+def _delta_from_json(base_fp: str, spec) -> "GraphDelta":
+    """Parse a JSON delta body into a validated
+    :class:`~repro.streaming.GraphDelta` against ``base_fp``.
+
+    Each of ``add``/``remove``/``update`` is either an object
+    ``{"src": [...], "dst": [...], "weights": [...]?}`` or a
+    positional ``[src, dst]`` / ``[src, dst, weights]`` array; an
+    integer ``grow_to`` sets the vertex-growth floor. Every shape or
+    type problem raises ValueError/TypeError, which the route maps to
+    a typed 400 — make_delta's own validation (array lengths, dtypes,
+    negative ids, non-int grow_to) rides the same path."""
+    from ..streaming import make_delta
+    if not isinstance(spec, dict):
+        raise ValueError(
+            "update jobs need a 'delta' object with add/remove/update "
+            "edge lists (and an optional grow_to)")
+    unknown = set(spec) - _DELTA_FIELDS
+    if unknown:
+        raise ValueError(f"unknown delta fields {sorted(unknown)}; "
+                         f"expected {sorted(_DELTA_FIELDS)}")
+
+    def edges(name):
+        v = spec.get(name)
+        if v is None:
+            return None
+        if isinstance(v, dict):
+            bad = set(v) - {"src", "dst", "weights"}
+            if bad:
+                raise ValueError(f"delta {name!r} has unknown keys "
+                                 f"{sorted(bad)}")
+            if "src" not in v or "dst" not in v:
+                raise ValueError(f"delta {name!r} needs both 'src' and "
+                                 f"'dst' lists")
+            parts = [v["src"], v["dst"]]
+            if v.get("weights") is not None:
+                parts.append(v["weights"])
+            return tuple(parts)
+        if isinstance(v, (list, tuple)) and len(v) in (2, 3):
+            return tuple(v)
+        raise ValueError(f"delta {name!r} must be an object with "
+                         f"src/dst(/weights) or a [src, dst(, weights)] "
+                         f"array")
+
+    return make_delta(base_fp, add=edges("add"), remove=edges("remove"),
+                      update=edges("update"), grow_to=spec.get("grow_to"))
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -166,6 +234,18 @@ class _Handler(BaseHTTPRequestHandler):
             return self._json(400, {"error": "bad_request",
                                     "message": "fingerprint is required "
                                     "(register graphs in-process)"})
+        kind = body.get("kind", "run")
+        if kind == "update":
+            return self._update(fp, body)
+        if kind == "compact":
+            return self._compact(fp, body)
+        if kind == "regroup":
+            return self._regroup(fp, body)
+        if kind != "run":
+            return self._json(400, {"error": "bad_request",
+                                    "message": f"unknown job kind "
+                                    f"{kind!r}; expected run, update, "
+                                    f"compact, or regroup"})
         kwargs = {}
         for k in ("app_kwargs", "max_iters", "path", "n_lanes"):
             if k in body:
@@ -185,6 +265,48 @@ class _Handler(BaseHTTPRequestHandler):
         except RejectedJob as exc:
             return self._json(429, {"error": "rejected",
                                     "message": str(exc)})
+        except KeyError as exc:
+            return self._json(404, {"error": "unknown_fingerprint",
+                                    "message": str(exc)})
+        except (ValueError, TypeError) as exc:
+            return self._json(400, {"error": "bad_request",
+                                    "message": str(exc)})
+        self._json(201, rec.to_dict())
+
+    def _update(self, fp: str, body: dict) -> None:
+        """A streaming delta update as a job. Delta parsing and the
+        apply-side validation both surface as typed 400s — a malformed
+        growth delta (e.g. a remove referencing a vertex only a LATER
+        add would create) must fail the HTTP call, not a worker."""
+        try:
+            delta = _delta_from_json(fp, body.get("delta"))
+            rec = self.plane.update_job(
+                fp, delta, tenant=body.get("tenant", "default"))
+        except KeyError as exc:
+            return self._json(404, {"error": "unknown_fingerprint",
+                                    "message": str(exc)})
+        except (ValueError, TypeError) as exc:
+            return self._json(400, {"error": "bad_delta",
+                                    "message": str(exc)})
+        self._json(201, rec.to_dict())
+
+    def _compact(self, fp: str, body: dict) -> None:
+        try:
+            rec = self.plane.compact_job(
+                fp, tenant=body.get("tenant", "default"))
+        except KeyError as exc:
+            return self._json(404, {"error": "unknown_fingerprint",
+                                    "message": str(exc)})
+        except (ValueError, TypeError) as exc:
+            return self._json(400, {"error": "bad_request",
+                                    "message": str(exc)})
+        self._json(201, rec.to_dict())
+
+    def _regroup(self, fp: str, body: dict) -> None:
+        try:
+            rec = self.plane.regroup_job(
+                fingerprint=fp, tenant=body.get("tenant", "default"),
+                force=bool(body.get("force", False)))
         except KeyError as exc:
             return self._json(404, {"error": "unknown_fingerprint",
                                     "message": str(exc)})

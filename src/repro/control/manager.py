@@ -204,6 +204,56 @@ class ControlPlane:
                 f"{res.fingerprint[:12]}… ({res.mode})")
         return self.jobs.get(rec.id)
 
+    def compact_job(self, fingerprint: str, *,
+                    tenant: str = "default") -> JobRecord:
+        """Squash the delta chain behind a served snapshot
+        (GraphService.compact_chain) as a tracked admin job; the
+        record's metrics carry the before/after chain depth and the
+        composed delta's change count."""
+        rec = self.jobs.create(kind="compact", tenant=tenant,
+                               app="compact", fingerprint=fingerprint)
+        self.jobs.transition(rec.id, JobState.RUNNING)
+        try:
+            event = self.service.compact_chain(fingerprint)
+        except Exception as exc:
+            self.jobs.transition(rec.id, JobState.FAILED, error=str(exc))
+            raise
+        self.jobs.transition(
+            rec.id, JobState.DONE, metrics=event,
+            log=(f"chain compacted: depth {event['depth_before']} -> "
+                 f"{event['depth_after']}") if event.get("compacted")
+                else f"nothing to compact (depth "
+                     f"{event['depth_before']})")
+        return self.jobs.get(rec.id)
+
+    def regroup_job(self, graph=None, *,
+                    fingerprint: Optional[str] = None,
+                    tenant: str = "default", force: bool = False,
+                    **kw) -> JobRecord:
+        """Run a grouping-drift check — and, past the threshold or
+        with ``force=True``, the fresh-DBG re-registration swap
+        (GraphService.regroup_now) — as a tracked admin job. The
+        record's metrics carry the drift event (misclassification
+        rate, dense frontier before/after, applied flag)."""
+        rec = self.jobs.create(kind="regroup", tenant=tenant,
+                               app="regroup",
+                               fingerprint=fingerprint or "")
+        self.jobs.transition(rec.id, JobState.RUNNING)
+        try:
+            event = self.service.regroup_now(graph,
+                                             fingerprint=fingerprint,
+                                             force=force, **kw)
+        except Exception as exc:
+            self.jobs.transition(rec.id, JobState.FAILED, error=str(exc))
+            raise
+        self.jobs.transition(
+            rec.id, JobState.DONE, metrics=event,
+            log=(f"regroup applied: drift {event['drift']:.3f}")
+                if event.get("applied")
+                else f"regroup skipped: drift {event['drift']:.3f} "
+                     f"under threshold")
+        return self.jobs.get(rec.id)
+
     def retune_job(self, graph=None, *, fingerprint: Optional[str] = None,
                    app: str = "pagerank", tenant: str = "default",
                    **kw) -> JobRecord:

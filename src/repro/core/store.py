@@ -118,20 +118,25 @@ class GraphStore:
                  infos: List[PartitionInfo], edges: dict,
                  little_cache: Dict[int, BlockedEdges],
                  big_cache: Dict[Tuple[int, ...], BlockedEdges],
-                 fingerprint: str, t_partition: float = 0.0
-                 ) -> "GraphStore":
+                 fingerprint: str, t_partition: float = 0.0,
+                 perm: Optional[np.ndarray] = None,
+                 V_pad: Optional[int] = None) -> "GraphStore":
         """Build a store by splicing delta-updated state into a base
         store's layout (used by :func:`repro.streaming.apply_delta`).
         Shares the base's frozen permutation and the untouched
         blockings; carries no source graph (``source is None`` — the
         chained ``fingerprint`` is its identity) and starts with an
         empty plan cache (the streaming layer rebuilds plans
-        surgically). NOTE: while base and derived snapshots are BOTH
-        alive (the old one draining out of the serving cache), shared
-        state — perm, carried blockings, reused packed payloads — is
-        counted in both stores' ``memory_footprint()``; like executor
-        byte budgeting, footprints are conservative attribution, not
-        exclusive ownership."""
+        surgically). Vertex-growth deltas pass ``perm``/``V_pad``
+        overrides: the permutation extended identity-wise over the new
+        tail ids, and the padding recomputed for the grown vertex
+        count (the lazy ``aux`` rebuilds against it). NOTE: while base
+        and derived snapshots are BOTH alive (the old one draining out
+        of the serving cache), shared state — perm, carried blockings,
+        reused packed payloads — is counted in both stores'
+        ``memory_footprint()``; like executor byte budgeting,
+        footprints are conservative attribution, not exclusive
+        ownership."""
         self = cls.__new__(cls)
         self.geom = base.geom
         self.use_dbg = base.use_dbg
@@ -139,11 +144,11 @@ class GraphStore:
         self.source = None
         self._fp = fingerprint
         self.graph = graph
-        self.perm = base.perm
+        self.perm = base.perm if perm is None else perm
         self.t_dbg = 0.0
         self._infos = infos
         self.edges = edges
-        self.V_pad = base.V_pad
+        self.V_pad = base.V_pad if V_pad is None else int(V_pad)
         self.t_partition = t_partition
         self._little_cache = dict(little_cache)
         self._big_cache = dict(big_cache)

@@ -154,6 +154,12 @@ class ServiceMetrics:
         self.packed_lanes_reused = 0
         self.packed_lanes_repacked = 0
         self.packed_bytes_reused = 0
+        # streaming lifecycle: drift-triggered DBG re-registrations,
+        # delta-chain compactions, placement-drift re-placements
+        self.regroups = 0
+        self.compactions = 0
+        self.placements_rebalanced = 0
+        self._chain_depth_fn = None   # wired by the service
         # control-plane admission outcomes
         self.rejected_queue_full = 0
         self.rejected_quota = 0
@@ -267,11 +273,34 @@ class ServiceMetrics:
                     "packed_lanes_repacked", 0)
                 self.packed_bytes_reused += stats.get(
                     "packed_bytes_reused", 0)
+                self.placements_rebalanced += stats.get(
+                    "placements_rebalanced", 0)
             self._stage["update"].add(t_ms)
 
     def record_update_failure(self) -> None:
         with self._lock:
             self.update_failures += 1
+
+    def record_regroup(self, n: int = 1) -> None:
+        """An applied drift-triggered DBG re-registration + store swap."""
+        with self._lock:
+            self.regroups += n
+
+    def record_compaction(self, n: int = 1) -> None:
+        """A delta chain squashed into one composed delta."""
+        with self._lock:
+            self.compactions += n
+
+    @property
+    def max_chain_depth(self) -> int:
+        """Deepest registered delta chain (0 without the service hook)."""
+        fn = self._chain_depth_fn
+        if fn is None:
+            return 0
+        try:
+            return int(fn())
+        except Exception:
+            return 0
 
     def record_done(self, m: RequestMetrics) -> None:
         with self._lock:
@@ -346,6 +375,9 @@ class ServiceMetrics:
                 "rejected_quota": self.rejected_quota,
                 "shed_deadline": self.shed_deadline,
                 "retunes": self.retunes,
+                "regroups": self.regroups,
+                "compactions": self.compactions,
+                "placements_rebalanced": self.placements_rebalanced,
                 "tenants": {t: dict(c) for t, c in self._tenants.items()},
                 "queue_depth": self.queue_depth,
             }
@@ -354,6 +386,10 @@ class ServiceMetrics:
                 snap[f"p99_{s}_ms"] = self._stage[s].percentile(99)
         snap["store_hit_rate"] = self.store_hit_rate
         snap["plan_hit_rate"] = self.plan_hit_rate
+        # OUTSIDE the metrics lock: the hook re-enters the service lock,
+        # which other paths take BEFORE this one (record_rejected under
+        # submit) — pulling it under our lock would invert the order
+        snap["max_chain_depth"] = self.max_chain_depth
         snap["drift"] = self.drift.report()   # its own lock
         snap["utilization"] = self.utilization.report()   # its own lock
         snap["calibration"] = self._calibration_info()
@@ -452,6 +488,21 @@ class ServiceMetrics:
                "Applied drift-triggered recalibrations (perf-model "
                "refit + plan re-derivation + atomic swap).",
                [((), snap["retunes"])])
+        metric("regroups_total", "counter",
+               "Applied grouping-drift re-registrations (fresh DBG "
+               "rebuild + atomic store swap).",
+               [((), snap["regroups"])])
+        metric("compactions_total", "counter",
+               "Delta chains squashed into one composed delta.",
+               [((), snap["compactions"])])
+        metric("placements_rebalanced_total", "counter",
+               "Sharded lane placements re-placed from scratch after "
+               "keep-pinned drift exceeded the rebalance threshold.",
+               [((), snap["placements_rebalanced"])])
+        metric("chain_depth", "gauge",
+               "Deepest delta chain behind any registered snapshot "
+               "(replay length of a cold rebuild).",
+               [((), snap["max_chain_depth"])])
         calib = snap.get("calibration")
         if calib is not None:
             metric("calibration_version", "gauge",

@@ -64,8 +64,10 @@ from ..core.planner import PlanConfig
 from ..core.store import GraphStore
 from ..core.types import Geometry
 from ..graphs.formats import Graph
-from ..streaming import (GraphDelta, apply_delta, apply_delta_to_graph,
-                         chain_fingerprint, rebuild_plans)
+from ..streaming import (GraphDelta, RegroupPolicy, apply_delta,
+                         apply_delta_to_graph, chain_fingerprint,
+                         compact_deltas, grouping_drift, rebuild_plans,
+                         reregister)
 from .fingerprint import StoreKey, resolve_fingerprint, store_key
 from .metrics import RequestMetrics, ServiceMetrics
 from .store_cache import GraphStoreCache
@@ -274,6 +276,29 @@ class GraphService:
         the service, warmed at construction). When set, store builds
         and delta splices run in worker processes instead of holding
         the GIL under a worker thread.
+    max_chain_depth: bound on the delta-chain length behind any
+        registered snapshot. An :meth:`update` that pushes a chain past
+        it auto-compacts (see :meth:`compact_chain`): the chain's
+        deltas are composed into ONE equivalent delta, so a cold
+        rebuild after eviction replays O(1) deltas instead of O(chain).
+        None = never auto-compact (explicit :meth:`compact_chain`
+        still works).
+    regroup: grouping-drift repair policy — a
+        :class:`~repro.streaming.RegroupPolicy`, True (defaults), or a
+        kwargs dict. When set, :meth:`update` tracks cumulative churn
+        per served snapshot; once churn passes the policy's floor the
+        drift metric runs (:func:`~repro.streaming.grouping_drift`) and
+        past its threshold the store is re-registered with a fresh DBG
+        grouping (:func:`~repro.streaming.reregister`) and swapped into
+        the cache atomically — in the background unless the policy says
+        ``sync=True``. None = never regroup automatically
+        (:meth:`regroup_now` still works).
+    rebalance_threshold: placement-drift bound forwarded to
+        :func:`~repro.streaming.rebuild_plans` on every update: a
+        sharded lane placement whose max/mean device load exceeds it
+        after a ``keep=``-pinned re-placement is dropped and re-placed
+        from scratch (fresh LPT, no residency pins). None = keep pins
+        regardless of skew.
     """
 
     def __init__(self, *, cache: Optional[GraphStoreCache] = None,
@@ -293,12 +318,23 @@ class GraphService:
                  pool: Union[WorkerPool, int, None] = None,
                  metrics: Optional[ServiceMetrics] = None,
                  tracer: Optional[obs.Tracer] = None,
-                 autotune=None):
+                 autotune=None,
+                 max_chain_depth: Optional[int] = None,
+                 regroup: Union[RegroupPolicy, bool, dict, None] = None,
+                 rebalance_threshold: Optional[float] = None):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
         if executor_byte_budget is not None and executor_byte_budget < 1:
             raise ValueError("executor_byte_budget must be >= 1, got "
                              f"{executor_byte_budget}")
+        if max_chain_depth is not None and max_chain_depth < 1:
+            raise ValueError(f"max_chain_depth must be >= 1, got "
+                             f"{max_chain_depth}")
+        if rebalance_threshold is not None and rebalance_threshold < 1.0:
+            # imbalance is max/mean load, >= 1.0 by construction; a
+            # threshold below that would re-place on EVERY update
+            raise ValueError(f"rebalance_threshold must be >= 1.0, got "
+                             f"{rebalance_threshold}")
         self.metrics = metrics or ServiceMetrics()
         # optional end-to-end tracing (repro.obs): every job gets a root
         # span carried across the queue/pool boundaries; None = off
@@ -339,6 +375,23 @@ class GraphService:
         self._inflight: Dict[tuple, _Job] = {}
         # fp -> Graph | _LazyGraph (delta chain); enables cold rebuilds
         self._registry: Dict[str, object] = {}
+        # streaming lifecycle policies (see the class docstring)
+        self.max_chain_depth = max_chain_depth
+        self.rebalance_threshold = rebalance_threshold
+        if regroup is True:
+            regroup = RegroupPolicy()
+        elif isinstance(regroup, dict):
+            regroup = RegroupPolicy(**regroup)
+        elif regroup is not None and not isinstance(regroup, RegroupPolicy):
+            raise TypeError(f"regroup= accepts a RegroupPolicy, True, or "
+                            f"a kwargs dict, got {regroup!r}")
+        self._regroup = regroup or None
+        # skey -> cumulative changed edges since registration/regroup;
+        # carried across re-keys so churn accrues over the whole chain
+        self._churn: Dict[StoreKey, int] = {}
+        self._regroup_last: Dict[StoreKey, float] = {}   # cooldown clock
+        self._regroup_busy: set = set()   # one regroup per key at a time
+        self.metrics._chain_depth_fn = self._max_chain_depth
         # skey -> count of queued/executing jobs; update() defers store
         # retirement while any exist, so even jobs still WAITING in the
         # queue (not yet lease-pinned) finish on the old snapshot
@@ -536,12 +589,17 @@ class GraphService:
                             result = self._pool.apply(store, delta)
                         with obs.span("plan.rebuild", "planner"):
                             result.stats.update(rebuild_plans(
-                                store, result.store, result.dirty_pids))
+                                store, result.store, result.dirty_pids,
+                                rebalance_threshold=self
+                                .rebalance_threshold))
                         result.stats["t_apply_ms"] = \
                             (time.perf_counter() - t_p) * 1e3
                     else:
                         with obs.span("store.apply_delta", "store"):
-                            result = apply_delta(store, delta)
+                            result = apply_delta(
+                                store, delta,
+                                rebalance_threshold=self
+                                .rebalance_threshold)
                     # lineage anchor for UNREGISTERED bases: a root
                     # store still knows its source Graph, and capturing
                     # it keeps the chained fingerprint rebuildable after
@@ -601,12 +659,29 @@ class GraphService:
             # graph; deferred updates register the post-delta graph
             # they just materialized
             anchor = base_entry if base_entry is not None else base_src
+            chained = False
             if post_graph is not None:
                 self._registry[new_fp] = post_graph
             elif anchor is not None:
                 self._registry[new_fp] = _LazyGraph(anchor, delta)
+                chained = True
             if base_entry is not None and not keep_base:
                 self._registry.pop(fingerprint, None)
+            # churn follows the lineage across the re-key: it measures
+            # edges changed since the last (re-)registration, not since
+            # the last delta
+            new_key = store_key(new_fp, geom, use_dbg)
+            self._churn[new_key] = (self._churn.pop(old_key, 0)
+                                    + delta.num_changes)
+        if (chained and self.max_chain_depth is not None
+                and self._chain_depth(new_fp) > self.max_chain_depth):
+            try:
+                self.compact_chain(new_fp)
+            except ValueError:
+                pass   # a branch-poisoned chain stays long, never fails
+                       # the update that happened to trip the bound
+        if result is not None and self._regroup is not None:
+            self._maybe_regroup(new_key)
 
         t_ms = (time.perf_counter() - t0) * 1e3
         stats = result.stats if result is not None else None
@@ -618,6 +693,200 @@ class GraphService:
             mode="incremental" if result is not None else "deferred",
             retired=retired, stats=stats, t_update_ms=t_ms)
 
+    # -- streaming lifecycle (compaction + regroup) ---------------------
+    def _chain_depth(self, fingerprint: str) -> int:
+        """Length of the lazy delta chain behind a registered snapshot
+        (0 for a plain or already-materialized Graph, and for unknown
+        fingerprints). Chain links are read without the materialize
+        lock — they are assigned atomically, and a depth racing a
+        concurrent materialize/compact only ever overestimates."""
+        with self._lock:
+            node = self._registry.get(fingerprint)
+        depth = 0
+        while isinstance(node, _LazyGraph) and node._graph is None:
+            depth += 1
+            node = node._base
+        return depth
+
+    def _max_chain_depth(self) -> int:
+        """Deepest delta chain across every registered snapshot — the
+        ``regraph_chain_depth`` gauge's pull hook."""
+        with self._lock:
+            fps = list(self._registry)
+        return max((self._chain_depth(fp) for fp in fps), default=0)
+
+    def compact_chain(self, fingerprint: str) -> dict:
+        """Squash the delta chain behind a registered snapshot into ONE
+        composed delta, preserving the chained-fingerprint lineage.
+
+        The registry keeps the SAME key — compaction shortens the path
+        from the anchor graph to the snapshot, never its identity — so
+        a cold rebuild after a store eviction replays O(1) deltas
+        instead of the whole chain. Chains that another snapshot still
+        branches from are safe: intermediate nodes stay referenced by
+        the other chain; only this entry's link is rewired. The
+        chain's lineage is verified link by link before anything is
+        mutated (a mismatch raises ValueError and leaves the chain
+        intact): each delta must target the registry identity of the
+        node below it. The check is structural — against registry keys,
+        not refolded digests — because a PREVIOUSLY composed delta is
+        content-equivalent to the links it replaced but hashes
+        differently, so repeated compaction cannot rely on
+        ``compact_deltas``'s strict digest fold. Returns an accounting
+        dict; an unregistered fingerprint raises KeyError."""
+        with self._lock:
+            entry = self._registry.get(fingerprint)
+            ident = {id(v): k for k, v in self._registry.items()}
+        if entry is None:
+            raise KeyError(f"fingerprint {fingerprint[:12]}… is not "
+                           f"registered; nothing to compact")
+        t0 = time.perf_counter()
+        out = {"fingerprint": fingerprint, "depth_before": 0,
+               "depth_after": 0, "compacted": False}
+        if not isinstance(entry, _LazyGraph):
+            out["t_compact_ms"] = (time.perf_counter() - t0) * 1e3
+            return out
+        with _LazyGraph._MAT_LOCK:
+            if entry._graph is None:
+                nodes = []
+                base = entry
+                while isinstance(base, _LazyGraph) and base._graph is None:
+                    nodes.append(base)
+                    base = base._base
+                anchor = base._graph if isinstance(base, _LazyGraph) \
+                    else base
+                nodes.reverse()
+                out["depth_before"] = out["depth_after"] = len(nodes)
+                if len(nodes) > 1:
+                    # lineage check: every delta targets the identity
+                    # of the node it chains onto
+                    below = ident.get(id(base))
+                    for node in nodes:
+                        want = node._delta.base_fp
+                        if below is not None and want != below:
+                            raise ValueError(
+                                f"chain behind {fingerprint[:12]}… has a "
+                                f"delta targeting {want[:12]}… where the "
+                                f"parent snapshot is {below[:12]}… — "
+                                f"lineage mismatch, not compacting")
+                        below = ident.get(id(node))
+                    if below != fingerprint:
+                        raise ValueError(
+                            f"chain tip registered as "
+                            f"{'?' if below is None else below[:12]}… != "
+                            f"{fingerprint[:12]}… — lineage mismatch, "
+                            f"not compacting")
+                    # compose BEFORE rewiring: a failed composition
+                    # leaves the entry untouched and replayable
+                    composed, _ = compact_deltas(
+                        [n._delta for n in nodes], strict=False)
+                    entry._base = anchor
+                    entry._delta = composed
+                    out["depth_after"] = 1
+                    out["compacted"] = True
+                    out["composed_changes"] = composed.num_changes
+        if out["compacted"]:
+            self.metrics.record_compaction()
+        out["t_compact_ms"] = (time.perf_counter() - t0) * 1e3
+        return out
+
+    def _maybe_regroup(self, skey: StoreKey) -> None:
+        """Post-update policy gate: once cumulative churn on this key
+        justifies a drift check (and the cooldown allows one), run the
+        check-and-maybe-swap — inline when the policy is ``sync``, else
+        on a daemon thread so update() latency stays flat."""
+        policy = self._regroup
+        store = self.cache.peek(skey)
+        if store is None:
+            return
+        now = time.monotonic()
+        with self._lock:
+            if skey in self._regroup_busy:
+                return
+            if not policy.churn_ready(self._churn.get(skey, 0),
+                                      store.graph.num_edges):
+                return
+            last = self._regroup_last.get(skey)
+            if (policy.cooldown_s and last is not None
+                    and now - last < policy.cooldown_s):
+                return
+            self._regroup_busy.add(skey)
+            self._regroup_last[skey] = now
+        if policy.sync:
+            self._regroup_run(skey)
+        else:
+            threading.Thread(target=self._regroup_run, args=(skey,),
+                             daemon=True, name="graph-regroup").start()
+
+    def _regroup_run(self, skey: StoreKey) -> Optional[dict]:
+        """Measure grouping drift for one cached store and, past the
+        policy threshold, swap in a freshly-regrouped rebuild. Never
+        raises: regrouping is an optimization and a failed check must
+        not break serving."""
+        policy = self._regroup or RegroupPolicy()
+        try:
+            store = self.cache.peek(skey)
+            if store is None:
+                return None
+            event = grouping_drift(store, hw=policy.hw)
+            event["fingerprint"] = skey[0]
+            event["applied"] = False
+            if event["drift"] > policy.drift_threshold:
+                self._regroup_swap(skey, store)
+                event["applied"] = True
+            return event
+        except Exception:
+            return None
+        finally:
+            with self._lock:
+                self._regroup_busy.discard(skey)
+
+    def _regroup_swap(self, skey: StoreKey, store: GraphStore) -> None:
+        """The atomic half of a regroup: rebuild with a fresh DBG
+        grouping under the SAME chained fingerprint, replace the cache
+        entry in place (``put`` on the live key — the swap other layers
+        also use), and purge the key's cached executors explicitly —
+        a put-replace fires no eviction hook, and those executors were
+        compiled against the OLD store's layout."""
+        fresh = reregister(store)
+        self.cache.put(skey, fresh)
+        with self._lock:
+            self._churn[skey] = 0
+            for k in [k for k in self._executors if k[0] == skey]:
+                self._drop_executor(k)
+        self.metrics.record_regroup()
+
+    def regroup_now(self, graph: Union[Graph, str, None] = None, *,
+                    fingerprint: Optional[str] = None,
+                    geom: Optional[Geometry] = None,
+                    use_dbg: Optional[bool] = None,
+                    force: bool = False) -> dict:
+        """Force a grouping-drift check — and, past the policy
+        threshold or unconditionally with ``force=True``, the
+        re-registration swap — for one served snapshot, bypassing the
+        churn/cooldown gates (admin/debug path, like
+        :meth:`retune_now`; the normal trigger is the post-update
+        policy check). Requires the store to be cached: regrouping
+        re-lays-out a LIVE store, there is nothing to do for an
+        evicted one. Returns the drift event dict."""
+        geom = geom or self.default_geom
+        use_dbg = self.default_use_dbg if use_dbg is None else bool(use_dbg)
+        fp = resolve_fingerprint(graph, fingerprint)
+        skey = store_key(fp, geom, use_dbg)
+        store = self.cache.peek(skey)
+        if store is None:
+            raise KeyError(f"no cached store for {fp[:12]}…; regroup "
+                           f"operates on the cached store — submit or "
+                           f"register() first")
+        policy = self._regroup or RegroupPolicy()
+        event = grouping_drift(store, hw=policy.hw)
+        event["fingerprint"] = fp
+        event["applied"] = False
+        if force or event["drift"] > policy.drift_threshold:
+            self._regroup_swap(skey, store)
+            event["applied"] = True
+        return event
+
     def _on_store_evicted(self, skey: StoreKey, store: GraphStore) -> None:
         """Cache-eviction hook: purge the evicted store's executors so
         they don't keep its device arrays alive past the byte budget.
@@ -627,6 +896,10 @@ class GraphService:
         with self._lock:
             for k in [k for k in self._executors if k[0] == skey]:
                 self._drop_executor(k)
+            # a later cold rebuild runs a fresh DBG pass, so the churn
+            # clock (changes since last registration) restarts with it
+            self._churn.pop(skey, None)
+            self._regroup_last.pop(skey, None)
 
     def _drop_executor(self, key) -> None:
         """Remove one cached executor (caller holds the lock)."""
@@ -1222,6 +1495,7 @@ class GraphService:
             "scheduler": self._scheduler.stats(),
             "pool": self._pool.stats() if self._pool is not None else None,
             "registered_graphs": len(self._registry),
+            "max_chain_depth": self._max_chain_depth(),
             "cached_executors": n_exec,
             "executor_bytes": exec_bytes,
             "executor_byte_budget": self.executor_byte_budget,

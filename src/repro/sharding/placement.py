@@ -98,6 +98,15 @@ class LanePlacement:
         return total / max(self.n_devices, 1) + max(self.lane_ests,
                                                     default=0.0)
 
+    def needs_rebalance(self, threshold: float) -> bool:
+        """Placement-drift trigger: True when the measured imbalance
+        (max/mean load) exceeds ``threshold``. Across a delta chain,
+        ``keep=``-pinned re-placements accumulate skew a fresh LPT
+        would not have; the streaming layer uses this to decide when to
+        drop the pins and re-place from scratch (see
+        ``repro.streaming.rebuild_plans``)."""
+        return self.imbalance > float(threshold)
+
     def stats(self) -> dict:
         loads = self.loads
         return {

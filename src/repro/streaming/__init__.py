@@ -11,14 +11,25 @@ every structurally-unchanged lane's packed device payload. The serving
 layer surfaces it as ``GraphService.update(fp, delta)`` with snapshot
 semantics (in-flight requests finish on the old store; new submits see
 the new fingerprint).
+
+Structural completeness: deltas can also GROW the vertex set (adds to
+ids >= V extend the tail of the frozen DBG id space), long chains
+compact into one equivalent delta with the original lineage preserved
+(:func:`compact_deltas`), and grouping-quality decay under churn is
+measured (:func:`grouping_drift`) and repaired by a policy-triggered
+re-registration (:func:`reregister`) with an atomic store swap.
 """
 from .apply import (BULK_THRESHOLD, DeltaApplyResult, apply_delta,
                     rebuild_plans, splice_delta)
 from .delta import (GraphDelta, apply_delta_to_graph, chain_fingerprint,
-                    edge_keys, make_delta, random_delta)
+                    compact_deltas, compose_deltas, edge_keys,
+                    grown_num_vertices, make_delta, random_delta)
+from .regroup import RegroupPolicy, grouping_drift, reregister
 
 __all__ = [
-    "BULK_THRESHOLD", "DeltaApplyResult", "GraphDelta", "apply_delta",
-    "apply_delta_to_graph", "chain_fingerprint", "edge_keys", "make_delta",
-    "random_delta", "rebuild_plans", "splice_delta",
+    "BULK_THRESHOLD", "DeltaApplyResult", "GraphDelta", "RegroupPolicy",
+    "apply_delta", "apply_delta_to_graph", "chain_fingerprint",
+    "compact_deltas", "compose_deltas", "edge_keys", "grouping_drift",
+    "grown_num_vertices", "make_delta", "random_delta", "rebuild_plans",
+    "reregister", "splice_delta",
 ]

@@ -35,9 +35,18 @@ partitions, so :func:`apply_delta` redoes only those:
      ``shards_moved`` / ``shard_bytes_moved`` account what transferred;
   5. chain the new snapshot fingerprint from ``(base_fp, delta_fp)``.
 
+Vertex growth rides the same machinery: add edges referencing ids >= V
+extend the vertex set, with new vertices mapped identity-wise onto the
+TAIL of the frozen DBG id space (so every clean partition and blocking
+survives untouched). Grown tail partitions are built purely from the
+delta's adds; the one V-dependent stat (the last old partition's
+``dst_hi``) is patched; ``V_pad`` and the extended permutation land on
+the derived store so the lazy aux rebuilds correctly.
+
 The permutation is frozen across a delta chain (recomputing DBG would
 dirty every partition); under heavy churn DBG quality decays slowly and
-a full re-registration re-optimizes it. Equivalence guarantee: the
+a full re-registration re-optimizes it (see ``repro.streaming.regroup``
+for the drift metric and policy trigger). Equivalence guarantee: the
 derived store's edge arrays, partition stats, blockings, plans and app
 results are bit-identical to a cold ``GraphStore(post_graph,
 perm=base.perm)`` build (tests/test_streaming.py holds this for all
@@ -53,7 +62,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -61,7 +70,7 @@ from ..core import partition as part
 from ..core.store import GraphStore
 from ..graphs.formats import Graph, freeze
 from .delta import (GraphDelta, _validate_against, chain_fingerprint,
-                    edge_keys, locate_edges)
+                    edge_keys, grown_num_vertices, locate_edges)
 
 __all__ = ["apply_delta", "splice_delta", "rebuild_plans",
            "DeltaApplyResult", "BULK_THRESHOLD"]
@@ -86,9 +95,15 @@ class DeltaApplyResult:
 
 
 def _orig_edge(store: GraphStore, s_dbg: int, d_dbg: int) -> str:
-    """Original-id rendering of a DBG-space edge (error messages)."""
+    """Original-id rendering of a DBG-space edge (error messages).
+    Grown tail ids sit beyond the frozen permutation and map to
+    themselves (growth extends the id space identity-wise)."""
     inv = np.argsort(store.perm)
-    return f"({int(inv[s_dbg])} -> {int(inv[d_dbg])})"
+
+    def _orig(i: int) -> int:
+        return int(inv[i]) if i < inv.shape[0] else int(i)
+
+    return f"({_orig(s_dbg)} -> {_orig(d_dbg)})"
 
 
 def _merge_segment(store: GraphStore, s, d, w,
@@ -277,9 +292,18 @@ def splice_delta(store: GraphStore, delta: GraphDelta, *,
     V = g.num_vertices
     weighted = g.weights is not None
     _validate_against(g, delta)   # range + weights-shape, shared oracle
+    new_V = grown_num_vertices(V, delta)
+    grown = new_V - V
 
     # -- 1. relabel into the frozen DBG id space & bucket by partition --
     perm, U = store.perm, store.geom.U
+    if grown:
+        # new vertices take the TAIL of the frozen DBG id space,
+        # identity-mapped — the same place a cold rebuild under the
+        # extended permutation puts them, so the frozen-perm invariant
+        # (and every clean blocking) survives growth untouched
+        perm = np.concatenate([perm, np.arange(V, new_V, dtype=np.int32)])
+        perm.setflags(write=False)
     a_src, a_dst = perm[delta.add_src], perm[delta.add_dst]
     r_src, r_dst = perm[delta.remove_src], perm[delta.remove_dst]
     u_src, u_dst = perm[delta.update_src], perm[delta.update_dst]
@@ -289,29 +313,45 @@ def splice_delta(store: GraphStore, delta: GraphDelta, *,
 
     # -- 2./3. merge dirty segments, splice, recompute dirty stats -----
     num_parts = len(store.infos)
-    dirty_fraction = (len(dirty_set) / num_parts) if num_parts else 0.0
-    use_bulk = (bulk_threshold is not None and dirty_set
+    new_num_parts = max(1, -(-new_V // U))
+    # the splice-vs-bulk choice is about merging BASE segments, so the
+    # dirty fraction counts old partitions only; grown tail partitions
+    # have no base segment (their edges are purely the delta's adds)
+    dirty_old = [int(p) for p in dirty if p < num_parts]
+    dirty_fraction = (len(dirty_old) / num_parts) if num_parts else 0.0
+    use_bulk = (bulk_threshold is not None and dirty_old
                 and dirty_fraction >= bulk_threshold)
     if use_bulk:
         bulk_segs = _merge_dirty_bulk(
-            store, [int(p) for p in dirty],
+            store, dirty_old,
             (a_src, a_dst,
              delta.add_weights if weighted and delta.num_adds else None),
             (r_src, r_dst, r_pid),
             (u_src, u_dst, delta.update_weights, u_pid),
             weighted)
+    empty_i, empty_f = np.zeros(0, np.int32), np.zeros(0, np.float32)
     seg_src: List[np.ndarray] = []
     seg_dst: List[np.ndarray] = []
     seg_w: List[np.ndarray] = []
     new_infos = []
     off = 0
-    for p in range(num_parts):
-        info = store.infos[p]
-        lo, hi = info.edge_lo, info.edge_hi
+    for p in range(new_num_parts):
+        info = store.infos[p] if p < num_parts else None
         if p in dirty_set:
-            if use_bulk:
+            if info is None:
+                # grown tail partition: its segment is purely the
+                # delta's adds, in the (src, dst) order the cold
+                # build's global lexsort would produce
+                m_a = a_pid == p
+                s, d = a_src[m_a], a_dst[m_a]
+                w = (delta.add_weights[m_a] if weighted
+                     else np.zeros(s.shape[0], np.float32))
+                order = np.lexsort((d, s))
+                s, d, w = s[order], d[order], w[order]
+            elif use_bulk:
                 s, d, w = bulk_segs[p]
             else:
+                lo, hi = info.edge_lo, info.edge_hi
                 m_a, m_r, m_u = a_pid == p, r_pid == p, u_pid == p
                 s, d, w = _merge_segment(
                     store,
@@ -323,14 +363,25 @@ def splice_delta(store: GraphStore, delta: GraphDelta, *,
                     (r_src[m_r], r_dst[m_r]),
                     (u_src[m_u], u_dst[m_u], delta.update_weights[m_u]),
                     weighted)
-            new_infos.append(part.partition_info(p, s, d, off, V,
+            new_infos.append(part.partition_info(p, s, d, off, new_V,
+                                                 store.geom))
+        elif info is None:
+            # grown id range with no edges yet (grow_to growth): the
+            # cold build still emits an empty partition info for it
+            s, d, w = empty_i, empty_i, empty_f
+            new_infos.append(part.partition_info(p, s, d, off, new_V,
                                                  store.geom))
         else:
+            lo, hi = info.edge_lo, info.edge_hi
             s = store.edges["src"][lo:hi]
             d = store.edges["dst"][lo:hi]
             w = store.edges["weights"][lo:hi]
+            # dst_hi is the one V-dependent stat: the last old partition
+            # widens when growth lands inside its dst range (blockings
+            # never read it, so they carry over bit-identical)
             new_infos.append(dataclasses.replace(
-                info, edge_lo=off, edge_hi=off + (hi - lo)))
+                info, edge_lo=off, edge_hi=off + (hi - lo),
+                dst_hi=min((p + 1) * U, new_V)))
         seg_src.append(s)
         seg_dst.append(d)
         seg_w.append(w)
@@ -340,6 +391,9 @@ def splice_delta(store: GraphStore, delta: GraphDelta, *,
         edges = {"src": np.concatenate(seg_src),
                  "dst": np.concatenate(seg_dst),
                  "weights": np.concatenate(seg_w)}
+        infos = new_infos
+    elif grown:                # grow_to-only: edges shared, infos grown
+        edges = store.edges
         infos = new_infos
     else:                      # empty delta: share everything
         edges = store.edges
@@ -351,7 +405,7 @@ def splice_delta(store: GraphStore, delta: GraphDelta, *,
     # only consumes it for order-independent quantities (V/E, degree
     # counts, byte accounting).
     new_graph = freeze(Graph(
-        num_vertices=V, src=edges["src"], dst=edges["dst"],
+        num_vertices=new_V, src=edges["src"], dst=edges["dst"],
         weights=edges["weights"] if weighted else None,
         name=g.name + "+d"))
 
@@ -371,13 +425,18 @@ def splice_delta(store: GraphStore, delta: GraphDelta, *,
     new_store = GraphStore._derived(
         store, graph=new_graph, infos=infos, edges=edges,
         little_cache=little_carried, big_cache=big_carried,
-        fingerprint=new_fp, t_partition=t_splice)
+        fingerprint=new_fp, t_partition=t_splice,
+        perm=perm if grown else None,
+        V_pad=(part.padded_num_vertices(new_V, store.geom) if grown
+               else None))
 
     stats = {
         "num_adds": delta.num_adds,
         "num_removes": delta.num_removes,
         "num_updates": delta.num_updates,
-        "partitions": num_parts,
+        "partitions": new_num_parts,
+        "grown_vertices": grown,
+        "new_partitions": new_num_parts - num_parts,
         "dirty_partitions": len(dirty_set),
         "dirty_fraction": dirty_fraction,
         "path": "bulk_sort" if use_bulk else "splice",
@@ -394,7 +453,8 @@ def splice_delta(store: GraphStore, delta: GraphDelta, *,
 
 
 def rebuild_plans(base_store: GraphStore, new_store: GraphStore,
-                  dirty_pids) -> dict:
+                  dirty_pids, *,
+                  rebalance_threshold: Optional[float] = None) -> dict:
     """Step 4 of the apply: rebuild every plan cached on ``base_store``
     against ``new_store``'s stats, seeding structurally-unchanged clean
     lanes with the pre-delta packed device payloads (and, for sharded
@@ -402,7 +462,16 @@ def rebuild_plans(base_store: GraphStore, new_store: GraphStore,
     process that owns the base store's plan cache — the device payloads
     it carries over never cross a process boundary. Returns the
     plan-side stats dict that :func:`apply_delta` merges into
-    :attr:`DeltaApplyResult.stats`."""
+    :attr:`DeltaApplyResult.stats`.
+
+    ``rebalance_threshold`` is the placement-drift bound: ``keep=``
+    pinning trades balance for zero-move carry-over, and across a long
+    delta chain the pinned placement can drift arbitrarily far from
+    what a fresh LPT would choose. When a rebuilt sharded form's
+    measured imbalance (max/mean device load) exceeds the bound, its
+    pins are dropped and the lanes are re-placed (and re-uploaded) from
+    scratch — the same observe/threshold/swap shape the autotuner uses
+    for plans. ``None`` keeps pinning unconditionally."""
     dirty_set = set(int(p) for p in dirty_pids)
     t1 = time.perf_counter()
     with base_store._plan_lock:
@@ -412,6 +481,8 @@ def rebuild_plans(base_store: GraphStore, new_store: GraphStore,
     packed_bytes_reused = 0
     shards_moved = shards_reused = 0
     shard_bytes_moved = shard_bytes_reused = 0
+    placements_rebalanced = 0
+    worst_imbalance = 0.0
     for old in old_bundles:
         bundle = new_store.plan(old.config)
         plans_rebuilt += 1
@@ -456,6 +527,19 @@ def rebuild_plans(base_store: GraphStore, new_store: GraphStore,
                 sseed[i] = old_sh.lanes[j]
             bundle._shard_seed = (devices, keep, sseed)
             new_sh = bundle.sharded_lanes(devices)   # eager, like packed
+            if (rebalance_threshold is not None
+                    and new_sh.placement.needs_rebalance(
+                        rebalance_threshold)):
+                # pinned placement drifted past the bound: drop the
+                # memoized form and re-place every lane by fresh LPT
+                # (payloads re-upload — the cost rebalancing amortizes)
+                with bundle._mat_lock:
+                    if bundle._sharded:
+                        bundle._sharded.pop(devices, None)
+                new_sh = bundle.sharded_lanes(devices)   # no pins, no seed
+                placements_rebalanced += 1
+            worst_imbalance = max(worst_imbalance,
+                                  new_sh.placement.imbalance)
             shards_moved += new_sh.moved
             shard_bytes_moved += new_sh.bytes_moved
             shards_reused += new_sh.reused
@@ -471,12 +555,16 @@ def rebuild_plans(base_store: GraphStore, new_store: GraphStore,
         "shard_bytes_moved": int(shard_bytes_moved),
         "shards_reused": shards_reused,
         "shard_bytes_reused": int(shard_bytes_reused),
+        "placements_rebalanced": placements_rebalanced,
+        "placement_imbalance": float(worst_imbalance),
         "t_replan_ms": t_replan * 1e3,
     }
 
 
 def apply_delta(store: GraphStore, delta: GraphDelta, *,
-                bulk_threshold=BULK_THRESHOLD) -> DeltaApplyResult:
+                bulk_threshold=BULK_THRESHOLD,
+                rebalance_threshold: Optional[float] = None
+                ) -> DeltaApplyResult:
     """Apply a :class:`GraphDelta` to a prepared store incrementally.
 
     Returns a :class:`DeltaApplyResult` whose ``store`` is a NEW
@@ -490,6 +578,8 @@ def apply_delta(store: GraphStore, delta: GraphDelta, *,
     """
     t0 = time.perf_counter()
     res = splice_delta(store, delta, bulk_threshold=bulk_threshold)
-    res.stats.update(rebuild_plans(store, res.store, res.dirty_pids))
+    res.stats.update(rebuild_plans(
+        store, res.store, res.dirty_pids,
+        rebalance_threshold=rebalance_threshold))
     res.stats["t_apply_ms"] = (time.perf_counter() - t0) * 1e3
     return res

@@ -33,7 +33,8 @@ import numpy as np
 from ..graphs.formats import Graph
 
 __all__ = ["GraphDelta", "make_delta", "chain_fingerprint",
-           "apply_delta_to_graph", "random_delta", "edge_keys"]
+           "apply_delta_to_graph", "random_delta", "edge_keys",
+           "grown_num_vertices", "compose_deltas", "compact_deltas"]
 
 
 def edge_keys(src: np.ndarray, dst: np.ndarray) -> np.ndarray:
@@ -99,6 +100,11 @@ class GraphDelta:
     update_src: np.ndarray
     update_dst: np.ndarray
     update_weights: np.ndarray
+    # vertex-growth floor: the post-delta graph has at least this many
+    # vertices even when no surviving add references them (a composed
+    # grow-then-remove must still grow V). None = growth is implied by
+    # the add lists alone (ids >= base V extend the vertex set).
+    grow_to: Optional[int] = None
 
     @property
     def num_adds(self) -> int:
@@ -140,12 +146,15 @@ class GraphDelta:
         h.update(b";aw=" + (b"none" if self.add_weights is None
                             else self.add_weights.tobytes()))
         h.update(b";uw=" + self.update_weights.tobytes())
+        if self.grow_to is not None:   # absent -> legacy digest unchanged
+            h.update(f";g={self.grow_to}".encode())
         fp = h.hexdigest()
         object.__setattr__(self, "_fp_cache", fp)
         return fp
 
 
-def make_delta(base_fp: str, add=None, remove=None, update=None) -> GraphDelta:
+def make_delta(base_fp: str, add=None, remove=None, update=None,
+               grow_to: Optional[int] = None) -> GraphDelta:
     """Build a validated :class:`GraphDelta`.
 
     Parameters
@@ -155,8 +164,13 @@ def make_delta(base_fp: str, add=None, remove=None, update=None) -> GraphDelta:
     add:    ``(src, dst)`` or ``(src, dst, weights)`` arrays of edges to
         insert. Weights are required iff the base graph is weighted
         (checked at apply time — the delta itself doesn't see the base).
+        Ids at or beyond the base vertex count GROW the vertex set (new
+        vertices extend the tail of the frozen DBG id space).
     remove: ``(src, dst)`` arrays of edges to delete.
     update: ``(src, dst, weights)`` arrays of weight changes.
+    grow_to: optional floor on the post-delta vertex count (see
+        :attr:`GraphDelta.grow_to`); ids below the base count are
+        harmless — the apply takes ``max(V, ...)``.
 
     Raises ``ValueError`` on duplicate edges within a list or the same
     edge appearing in two lists (remove+add of one edge is expressed as
@@ -165,6 +179,10 @@ def make_delta(base_fp: str, add=None, remove=None, update=None) -> GraphDelta:
     if not isinstance(base_fp, str) or not base_fp:
         raise ValueError(f"base_fp must be a non-empty fingerprint string, "
                          f"got {base_fp!r}")
+    if grow_to is not None:
+        grow_to = int(grow_to)
+        if grow_to < 0:
+            raise ValueError(f"grow_to must be >= 0, got {grow_to}")
     empty_i = np.zeros(0, np.int32)
     empty_f = np.zeros(0, np.float32)
 
@@ -207,7 +225,8 @@ def make_delta(base_fp: str, add=None, remove=None, update=None) -> GraphDelta:
         a_w.setflags(write=False)
     return GraphDelta(base_fp=base_fp, add_src=a_src, add_dst=a_dst,
                       add_weights=a_w, remove_src=r_src, remove_dst=r_dst,
-                      update_src=u_src, update_dst=u_dst, update_weights=u_w)
+                      update_src=u_src, update_dst=u_dst, update_weights=u_w,
+                      grow_to=grow_to)
 
 
 def chain_fingerprint(base_fp: str, delta_fp: str) -> str:
@@ -220,16 +239,35 @@ def chain_fingerprint(base_fp: str, delta_fp: str) -> str:
     return h.hexdigest()
 
 
+def grown_num_vertices(num_vertices: int, delta: GraphDelta) -> int:
+    """Vertex count of the post-delta graph. Add edges referencing ids
+    at or beyond the base count grow the vertex set (intermediate ids
+    materialize as zero-degree vertices), and :attr:`GraphDelta.grow_to`
+    floors the result so a composed grow-then-remove still grows.
+    Removes and updates can never grow (enforced by
+    :func:`_validate_against`)."""
+    mv = -1
+    if delta.add_src.size:
+        mv = max(int(delta.add_src.max()), int(delta.add_dst.max()))
+    return max(int(num_vertices), mv + 1, int(delta.grow_to or 0))
+
+
 def _validate_against(graph: Graph, delta: GraphDelta) -> None:
     """Weights-shape and vertex-range checks shared by both apply paths
     (per-edge existence checks happen inside each path, where the keyed
-    arrays already exist)."""
-    mv = delta.max_vertex()
+    arrays already exist). Adds may reference ids >= the base vertex
+    count — that is the vertex-growth path — but removes/updates target
+    edges that MUST already exist, so out-of-range ids there are
+    errors."""
+    mv = max((int(a.max()) for a in (delta.remove_src, delta.remove_dst,
+                                     delta.update_src, delta.update_dst)
+              if a.size), default=-1)
     if mv >= graph.num_vertices:
         raise ValueError(
-            f"delta references vertex {mv} but the base graph has only "
-            f"{graph.num_vertices} vertices (vertex growth is not "
-            f"supported by deltas — rebuild the store for a larger graph)")
+            f"delta remove/update references vertex {mv} but the base "
+            f"graph has only {graph.num_vertices} vertices (vertex growth "
+            f"happens through the add list — or grow_to= — and only adds "
+            f"may reference new ids)")
     weighted = graph.weights is not None
     if weighted and delta.num_adds and delta.add_weights is None:
         raise ValueError("base graph is weighted: adds must carry weights")
@@ -289,17 +327,21 @@ def apply_delta_to_graph(graph: Graph, delta: GraphDelta,
 
     src = np.concatenate([graph.src[keep], delta.add_src])
     dst = np.concatenate([graph.dst[keep], delta.add_dst])
-    w = (np.concatenate([weights[keep], delta.add_weights])
-         if weighted else None)
+    aw = (delta.add_weights if delta.add_weights is not None
+          else np.zeros(delta.num_adds, np.float32))   # add-free delta
+    w = np.concatenate([weights[keep], aw]) if weighted else None
     from ..graphs.formats import from_edges
-    return from_edges(src, dst, num_vertices=graph.num_vertices, weights=w,
-                      name=graph.name, dedup=False)
+    return from_edges(src, dst,
+                      num_vertices=grown_num_vertices(graph.num_vertices,
+                                                      delta),
+                      weights=w, name=graph.name, dedup=False)
 
 
 def random_delta(graph: Graph, churn: float = 0.01, seed: int = 0,
                  base_fp: Optional[str] = None,
                  update_frac: float = 0.0,
-                 hot_frac: Optional[float] = None) -> GraphDelta:
+                 hot_frac: Optional[float] = None,
+                 grow_frac: float = 0.0) -> GraphDelta:
     """Synthesize an edge-churn delta: ``churn * E`` total changes,
     half removals of existing edges and half insertions of non-edges
     (plus optionally ``update_frac * E`` weight updates on a weighted
@@ -314,7 +356,14 @@ def random_delta(graph: Graph, churn: float = 0.01, seed: int = 0,
     churn keeps the dirty partition set small — the locality
     :func:`~repro.streaming.apply_delta` exploits. ``None`` = uniform
     destinations (the no-locality worst case: every partition goes
-    dirty once changes outnumber partitions)."""
+    dirty once changes outnumber partitions).
+
+    ``grow_frac`` emits ``grow_frac * E`` additional edges to
+    OUT-OF-RANGE vertex ids (ids >= V), exercising the vertex-growth
+    path: new vertices take the tail of the id space and attach
+    preferentially — sources are drawn by out-degree (sampling edge
+    endpoints), and later growth edges concentrate on the earlier new
+    vertices, the usual rich-get-richer arrival model."""
     rng = np.random.default_rng(seed)
     E, V = graph.num_edges, graph.num_vertices
     n_half = max(1, int(E * churn / 2))
@@ -369,6 +418,26 @@ def random_delta(graph: Graph, churn: float = 0.01, seed: int = 0,
             stalled += 1
     a_src = (np.concatenate(got_s) if got_s else np.zeros(0, np.int32))
     a_dst = (np.concatenate(got_d) if got_d else np.zeros(0, np.int32))
+
+    grow_to = None
+    if grow_frac > 0 and E:
+        n_grow = max(1, int(E * grow_frac))
+        n_new = max(1, n_grow // 2)
+        new_ids = np.arange(V, V + n_new, dtype=np.int32)
+        # sources by preferential attachment: sampling edge slots picks
+        # a vertex with probability proportional to its out-degree
+        g_src = graph.src[rng.integers(0, E, size=n_grow)].astype(np.int32)
+        # every new vertex gets at least one in-edge; the surplus lands
+        # on the earliest arrivals (rich-get-richer within the batch)
+        extra = (new_ids[rng.integers(0, max(1, n_new // 2),
+                                      size=n_grow - n_new)]
+                 if n_grow > n_new else np.zeros(0, np.int32))
+        g_dst = np.concatenate([new_ids, extra])
+        _, first = np.unique(edge_keys(g_src, g_dst), return_index=True)
+        sel = np.sort(first)                  # dedupe, keep arrival order
+        a_src = np.concatenate([a_src, g_src[sel]])
+        a_dst = np.concatenate([a_dst, g_dst[sel]])
+        grow_to = V + n_new
     add = ((a_src, a_dst, rng.random(a_src.shape[0]).astype(np.float32))
            if weighted else (a_src, a_dst))
 
@@ -382,4 +451,136 @@ def random_delta(graph: Graph, churn: float = 0.01, seed: int = 0,
                       rng.random(n_upd).astype(np.float32))
 
     return make_delta(base_fp or graph.fingerprint(), add=add,
-                      remove=remove, update=update)
+                      remove=remove, update=update, grow_to=grow_to)
+
+
+def compose_deltas(first: GraphDelta, second: GraphDelta) -> GraphDelta:
+    """One delta equivalent to applying ``first`` then ``second``.
+
+    Per-edge-key resolution against the shared base snapshot:
+    add+remove cancels, add+update keeps the add with the new weight,
+    remove+add becomes an update (weighted) or cancels (unweighted —
+    the identical edge is restored), update+update keeps the last
+    weight, update+remove collapses to the remove. Combinations that
+    could never have applied in sequence (adding an edge that exists
+    post-``first``, removing/updating one that doesn't) raise — the
+    inputs are assumed to be a VALID chain, and composition surfaces
+    corruption instead of hiding it.
+
+    The composed ``grow_to`` covers every vertex either delta could
+    have created, so grow-then-remove still grows the vertex set (the
+    floor is taken under ``max`` with the base count, so ids below it
+    are harmless). ``base_fp`` is ``first``'s — the composed delta
+    applies where ``first`` did. Its chained fingerprint differs from
+    the original chain's tip (a different edit path); callers that
+    compact a chain keep the ORIGINAL tip identity (see
+    :func:`compact_deltas`).
+    """
+    weighted = (first.add_weights is not None
+                or second.add_weights is not None
+                or first.num_updates > 0 or second.num_updates > 0)
+
+    state = {}   # edge key -> ("A"|"R"|"U", weight) relative to the base
+    aw1 = (first.add_weights if first.add_weights is not None
+           else np.zeros(first.num_adds, np.float32))
+    for k, w in zip(edge_keys(first.add_src, first.add_dst), aw1):
+        state[int(k)] = ("A", float(w))
+    for k in edge_keys(first.remove_src, first.remove_dst):
+        state[int(k)] = ("R", 0.0)
+    for k, w in zip(edge_keys(first.update_src, first.update_dst),
+                    first.update_weights):
+        state[int(k)] = ("U", float(w))
+
+    def _edge(k):
+        return f"({k >> 32} -> {k & 0xFFFFFFFF})"
+
+    aw2 = (second.add_weights if second.add_weights is not None
+           else np.zeros(second.num_adds, np.float32))
+    for k, w in zip(edge_keys(second.add_src, second.add_dst), aw2):
+        k = int(k)
+        prev = state.get(k)
+        if prev is None:
+            state[k] = ("A", float(w))
+        elif prev[0] == "R":
+            if weighted:
+                state[k] = ("U", float(w))   # remove+re-add = weight change
+            else:
+                del state[k]                 # identical edge restored
+        else:
+            raise ValueError(f"compose: second delta adds edge {_edge(k)} "
+                             f"which exists after the first delta")
+    for k in edge_keys(second.remove_src, second.remove_dst):
+        k = int(k)
+        prev = state.get(k)
+        if prev is None:
+            state[k] = ("R", 0.0)
+        elif prev[0] == "A":
+            del state[k]                     # added then removed: no-op
+        elif prev[0] == "U":
+            state[k] = ("R", 0.0)
+        else:
+            raise ValueError(f"compose: second delta removes edge "
+                             f"{_edge(k)} which the first already removed")
+    for k, w in zip(edge_keys(second.update_src, second.update_dst),
+                    second.update_weights):
+        k = int(k)
+        prev = state.get(k)
+        if prev is None or prev[0] == "U":
+            state[k] = ("U", float(w))
+        elif prev[0] == "A":
+            state[k] = ("A", float(w))
+        else:
+            raise ValueError(f"compose: second delta updates edge "
+                             f"{_edge(k)} which the first removed")
+
+    adds, removes, updates = [], [], []
+    for k in sorted(state):
+        op, w = state[k]
+        (adds if op == "A" else removes if op == "R" else updates).append(
+            (k >> 32, k & 0xFFFFFFFF, w))
+
+    def _cols(rows):
+        s = np.array([r[0] for r in rows], np.int32)
+        d = np.array([r[1] for r in rows], np.int32)
+        w = np.array([r[2] for r in rows], np.float32)
+        return s, d, w
+
+    a_s, a_d, a_w = _cols(adds)
+    r_s, r_d, _ = _cols(removes)
+    u_s, u_d, u_w = _cols(updates)
+    grow_to = max(int(first.grow_to or 0), int(second.grow_to or 0),
+                  first.max_vertex() + 1, second.max_vertex() + 1)
+    return make_delta(
+        first.base_fp,
+        add=((a_s, a_d, a_w) if weighted else (a_s, a_d)),
+        remove=(r_s, r_d),
+        update=((u_s, u_d, u_w) if len(updates) else None),
+        grow_to=(grow_to if grow_to > 0 else None))
+
+
+def compact_deltas(deltas, strict: bool = True):
+    """Squash a contiguous delta chain into ONE equivalent delta.
+
+    Returns ``(composed, tip_fp)`` where ``tip_fp`` is the chain's
+    ORIGINAL tip fingerprint — ``chain_fingerprint`` folded over the
+    input deltas. Compaction changes the replay (one delta instead of
+    N) but must not change the snapshot's identity, so callers keep
+    addressing the compacted snapshot by ``tip_fp``, never by
+    re-chaining the composed delta.
+
+    ``strict`` verifies lineage: every delta's ``base_fp`` must equal
+    the chained fingerprint its predecessor produced.
+    """
+    deltas = list(deltas)
+    if not deltas:
+        raise ValueError("compact_deltas needs at least one delta")
+    out = deltas[0]
+    tip = chain_fingerprint(out.base_fp, out.fingerprint())
+    for d in deltas[1:]:
+        if strict and d.base_fp != tip:
+            raise ValueError(
+                f"delta chain is not contiguous: delta targets snapshot "
+                f"{d.base_fp[:12]}… but the chain's tip is {tip[:12]}…")
+        out = compose_deltas(out, d)
+        tip = chain_fingerprint(tip, d.fingerprint())
+    return out, tip

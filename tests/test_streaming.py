@@ -145,10 +145,17 @@ def test_apply_strictness(wgraph, wstore):
         apply_delta_to_graph(wgraph, wrong)
     with pytest.raises(ValueError, match="targets snapshot"):
         apply_delta(wstore, wrong)
-    # vertex growth is rejected
-    oob = make_delta(fp, add=([1], [wgraph.num_vertices], [0.5]))
+    # adds beyond V are the GROWTH path now — but removes/updates of
+    # never-seen ids stay errors, and the message names the growth path
+    V = wgraph.num_vertices
+    grow = make_delta(fp, add=([1], [V], [0.5]))
+    assert apply_delta(wstore, grow).store.graph.num_vertices == V + 1
+    oob_rm = make_delta(fp, remove=([1], [V]))
     with pytest.raises(ValueError, match="vertex growth"):
-        apply_delta(wstore, oob)
+        apply_delta(wstore, oob_rm)
+    oob_up = make_delta(fp, update=([1], [V], [0.5]))
+    with pytest.raises(ValueError, match="add list"):
+        apply_delta_to_graph(wgraph, oob_up)
     # unweighted base rejects weight updates
     ug = rmat(8, 4, seed=2)
     upd = make_delta(ug.fingerprint(),

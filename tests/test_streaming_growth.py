@@ -1,0 +1,718 @@
+"""Grow-the-graph streaming tests.
+
+Covers the vertex-growth delta path end to end: growth deltas
+bit-identical to a cold rebuild of the post-growth graph under the
+extended frozen permutation (all five apps, ref and pallas-interpret),
+grow-then-remove via delta composition, growth crossing a partition
+boundary, growth on a sharded store with resident-payload accounting,
+delta-chain compaction with preserved lineage, the placement-drift
+rebalance trigger, the DBG re-registration swap, and the serving /
+control-plane integration (executor purges, job records, typed HTTP
+errors, regraph_* gauges). A hypothesis differential property fuzzes
+chains mixing growth, removes, updates and compaction.
+"""
+import json
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import gas
+from repro.core.planner import PlanConfig
+from repro.core.store import GraphStore
+from repro.core.types import Geometry
+from repro.graphs.formats import from_edges
+from repro.graphs.rmat import rmat
+from repro.serve_graph.fingerprint import store_key
+from repro.sharding import LanePlacement
+from repro.streaming import (RegroupPolicy, apply_delta,
+                             apply_delta_to_graph, chain_fingerprint,
+                             compact_deltas, compose_deltas,
+                             grouping_drift, grown_num_vertices,
+                             make_delta, random_delta, rebuild_plans,
+                             reregister)
+
+GEOM = Geometry(U=256, W=128, T=128, E_BLK=128, big_batch=2)
+CFG = PlanConfig(n_lanes=4)
+
+APPS = [
+    ("pagerank", {}),
+    ("bfs", {"root": 0}),
+    ("sssp", {"root": 0}),
+    ("wcc", {}),
+    ("closeness", {"sources": np.arange(4)}),
+]
+
+
+@pytest.fixture(scope="module")
+def wgraph():
+    return rmat(11, 8, seed=3, weighted=True)   # 2048 V -> 8 partitions
+
+
+@pytest.fixture(scope="module")
+def wstore(wgraph):
+    return GraphStore(wgraph, geom=GEOM)
+
+
+def _run(store, app, kw, path, max_iters=5):
+    a = api.BUILTIN_APPS[app](**kw)
+    return api.compile(None, a, store=store, config=CFG,
+                       path=path).run(max_iters=max_iters)[0]
+
+
+def _grown_perm(base_perm, new_v):
+    """The documented growth layout: new vertices identity-mapped onto
+    the tail of the frozen DBG id space."""
+    v = base_perm.shape[0]
+    return np.concatenate([np.asarray(base_perm),
+                           np.arange(v, new_v, dtype=np.int32)])
+
+
+def _assert_stores_identical(inc, cold):
+    for k in ("src", "dst", "weights"):
+        assert np.array_equal(inc.edges[k], cold.edges[k]), k
+    assert inc.infos == cold.infos
+    assert inc.V_pad == cold.V_pad
+    assert np.array_equal(inc.perm, cold.perm)
+
+
+# ---------------------------------------------------------------------------
+# Growth delta construction
+# ---------------------------------------------------------------------------
+
+def test_grown_num_vertices_unit():
+    fp = "ab" * 16
+    assert grown_num_vertices(10, make_delta(fp)) == 10
+    assert grown_num_vertices(10, make_delta(fp, add=([1], [12]))) == 13
+    assert grown_num_vertices(10, make_delta(fp, add=([14], [1]))) == 15
+    assert grown_num_vertices(10, make_delta(fp, grow_to=20)) == 20
+    # grow_to below the base count is a harmless floor
+    assert grown_num_vertices(10, make_delta(fp, grow_to=4)) == 10
+    # the max of adds and grow_to wins
+    d = make_delta(fp, add=([1], [25]), grow_to=12)
+    assert grown_num_vertices(10, d) == 26
+    with pytest.raises(ValueError):
+        make_delta(fp, grow_to=-1)
+
+
+def test_grow_to_changes_fingerprint_but_absence_is_legacy():
+    """grow_to folds into the delta fingerprint only when SET, so every
+    pre-growth delta digest (and every chained snapshot fingerprint
+    built from one) is unchanged."""
+    fp = "cd" * 16
+    plain = make_delta(fp, add=([0], [1]))
+    grown = make_delta(fp, add=([0], [1]), grow_to=50)
+    assert plain.fingerprint() != grown.fingerprint()
+    assert plain.fingerprint() == make_delta(fp, add=([0], [1])).fingerprint()
+
+
+def test_random_delta_grow_frac(wgraph):
+    d = random_delta(wgraph, churn=0.01, seed=7, grow_frac=0.02)
+    V = wgraph.num_vertices
+    assert d.grow_to is not None and d.grow_to > V
+    new_mask = (d.add_src >= V) | (d.add_dst >= V)
+    assert new_mask.sum() >= 1, "grow_frac must add edges on new ids"
+    # growth edges attach preferentially: every new-id edge touches
+    # either a sampled existing endpoint or another new id
+    assert d.add_weights is not None and \
+        d.add_weights.shape[0] == d.num_adds
+    # no growth requested -> classic churn delta, no floor
+    d0 = random_delta(wgraph, churn=0.01, seed=7)
+    assert d0.grow_to is None
+    assert (d0.add_src < V).all() and (d0.add_dst < V).all()
+
+
+# ---------------------------------------------------------------------------
+# Growth apply == cold rebuild (the tentpole equivalence, grown)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("churn,grow_frac", [
+    (0.0, 0.02),     # pure growth
+    (0.01, 0.02),    # growth + uniform churn
+    (0.05, 0.10),    # heavy both
+])
+def test_growth_apply_matches_cold_rebuild(wgraph, wstore, churn,
+                                           grow_frac):
+    delta = random_delta(wgraph, churn=churn, seed=17,
+                         grow_frac=grow_frac)
+    res = apply_delta(wstore, delta)
+    post = apply_delta_to_graph(wgraph, delta)
+    assert post.num_vertices == grown_num_vertices(wgraph.num_vertices,
+                                                   delta)
+    cold = GraphStore(post, geom=GEOM,
+                      perm=_grown_perm(wstore.perm, post.num_vertices))
+    _assert_stores_identical(res.store, cold)
+    assert res.stats["grown_vertices"] == \
+        post.num_vertices - wgraph.num_vertices
+    assert res.fingerprint == chain_fingerprint(wgraph.fingerprint(),
+                                                delta.fingerprint())
+
+
+@pytest.mark.parametrize("app,kw", APPS)
+def test_growth_apps_bit_identical_ref(wgraph, wstore, app, kw):
+    """Growth delta applied incrementally runs every builtin app
+    bit-identically to a cold GraphStore of the post-growth graph
+    (extended frozen permutation) — the acceptance gate, ref path."""
+    delta = random_delta(wgraph, churn=0.02, seed=23, update_frac=0.005,
+                         grow_frac=0.03)
+    res = apply_delta(wstore, delta)
+    post = apply_delta_to_graph(wgraph, delta)
+    cold = GraphStore(post, geom=GEOM,
+                      perm=_grown_perm(wstore.perm, post.num_vertices))
+    assert np.array_equal(_run(res.store, app, kw, "ref"),
+                          _run(cold, app, kw, "ref")), app
+
+
+@pytest.mark.parametrize("app,kw", APPS)
+def test_growth_apps_bit_identical_pallas_interpret(app, kw):
+    """Same growth equivalence through the Pallas kernels (interpret on
+    CPU). Smaller graph: interpret mode is slow."""
+    g = rmat(9, 6, seed=5, weighted=True)   # 512 V -> 2 partitions
+    store = GraphStore(g, geom=GEOM)
+    delta = random_delta(g, churn=0.03, seed=29, update_frac=0.01,
+                         grow_frac=0.05)
+    res = apply_delta(store, delta)
+    post = apply_delta_to_graph(g, delta)
+    cold = GraphStore(post, geom=GEOM,
+                      perm=_grown_perm(store.perm, post.num_vertices))
+    assert np.array_equal(_run(res.store, app, kw, "pallas", max_iters=3),
+                          _run(cold, app, kw, "pallas", max_iters=3)), app
+
+
+def test_growth_crosses_partition_boundary(wgraph, wstore):
+    """Growth spanning MULTIPLE new dst-range partitions: new vertices
+    land in two fresh tail partitions and the old last partition's
+    dst_hi stays correct."""
+    V, U = wgraph.num_vertices, GEOM.U
+    fp = wgraph.fingerprint()
+    delta = make_delta(
+        fp,
+        add=([1, 2, 3], [V, V + U, V + U + 3],
+             [0.5, 0.25, 0.125]))
+    res = apply_delta(wstore, delta)
+    assert res.stats["new_partitions"] == 2
+    assert res.store.graph.num_vertices == V + U + 4
+    post = apply_delta_to_graph(wgraph, delta)
+    cold = GraphStore(post, geom=GEOM,
+                      perm=_grown_perm(wstore.perm, post.num_vertices))
+    _assert_stores_identical(res.store, cold)
+    # the two tail partitions own exactly the new dst ranges
+    assert res.store.infos[-2].dst_lo == V and \
+        res.store.infos[-2].dst_hi == V + U
+    assert res.store.infos[-1].dst_hi == V + U + 4
+
+
+def test_grow_to_only_materializes_empty_tail(wgraph, wstore):
+    """A delta with ONLY grow_to (no adds) grows the vertex set with
+    zero-degree vertices and empty tail partitions."""
+    V = wgraph.num_vertices
+    delta = make_delta(wgraph.fingerprint(), grow_to=V + 300)
+    res = apply_delta(wstore, delta)
+    assert res.store.graph.num_vertices == V + 300
+    assert res.stats["grown_vertices"] == 300
+    assert res.stats["dirty_partitions"] == 0
+    post = apply_delta_to_graph(wgraph, delta)
+    cold = GraphStore(post, geom=GEOM,
+                      perm=_grown_perm(wstore.perm, V + 300))
+    _assert_stores_identical(res.store, cold)
+    for info in res.store.infos[8:]:
+        assert info.num_edges == 0
+    assert np.array_equal(_run(res.store, "pagerank", {}, "ref"),
+                          _run(cold, "pagerank", {}, "ref"))
+
+
+def test_grow_then_remove_still_grows(wgraph, wstore):
+    """grow (add an edge on a new vertex) then remove that edge: the
+    composed delta must still grow V — grow_to carries the floor —
+    and chained incremental apply == composed apply == cold."""
+    V = wgraph.num_vertices
+    fp = wgraph.fingerprint()
+    d1 = make_delta(fp, add=([1], [V], [0.5]))
+    r1 = apply_delta(wstore, d1)
+    d2 = make_delta(r1.fingerprint, remove=([1], [V]))
+    r2 = apply_delta(r1.store, d2)
+    assert r2.store.graph.num_vertices == V + 1
+    assert r2.store.graph.num_edges == wgraph.num_edges
+
+    composed, tip = compact_deltas([d1, d2])
+    assert tip == r2.fingerprint
+    assert composed.num_changes == 0 and composed.grow_to == V + 1
+    post = apply_delta_to_graph(wgraph, composed, check_fp=False)
+    assert post.num_vertices == V + 1
+    cold = GraphStore(post, geom=GEOM, perm=_grown_perm(wstore.perm, V + 1))
+    _assert_stores_identical(r2.store, cold)
+
+
+# ---------------------------------------------------------------------------
+# Delta composition / compaction
+# ---------------------------------------------------------------------------
+
+def test_compose_deltas_state_machine():
+    fp = "ef" * 16
+    # add+remove cancels; add+update keeps the add with the new weight
+    d1 = make_delta(fp, add=([0, 1], [5, 6], [1.0, 2.0]))
+    fp1 = chain_fingerprint(fp, d1.fingerprint())
+    d2 = make_delta(fp1, remove=([0], [5]), update=([1], [6], [9.0]))
+    c = compose_deltas(d1, d2)
+    assert c.num_adds == 1 and c.num_removes == 0 and c.num_updates == 0
+    assert float(c.add_weights[0]) == 9.0
+    # remove+add (weighted) folds to an update; update+remove to remove
+    d3 = make_delta(fp, remove=([2], [7]), update=([3], [8], [4.0]))
+    fp3 = chain_fingerprint(fp, d3.fingerprint())
+    d4 = make_delta(fp3, add=([2], [7], [5.0]), remove=([3], [8]))
+    c2 = compose_deltas(d3, d4)
+    assert c2.num_updates == 1 and float(c2.update_weights[0]) == 5.0
+    assert c2.num_removes == 1 and int(c2.remove_src[0]) == 3
+    # update+update keeps the LAST weight
+    d5 = make_delta(fp, update=([4], [9], [1.5]))
+    d6 = make_delta(chain_fingerprint(fp, d5.fingerprint()),
+                    update=([4], [9], [2.5]))
+    c3 = compose_deltas(d5, d6)
+    assert c3.num_updates == 1 and float(c3.update_weights[0]) == 2.5
+    # invalid sequences surface corruption instead of hiding it
+    da = make_delta(fp, add=([0], [1], [1.0]))
+    with pytest.raises(ValueError):   # add then add of the same edge
+        compose_deltas(da, make_delta(
+            chain_fingerprint(fp, da.fingerprint()), add=([0], [1], [2.0])))
+    dr = make_delta(fp, remove=([0], [1]))
+    with pytest.raises(ValueError):   # remove then remove
+        compose_deltas(dr, make_delta(
+            chain_fingerprint(fp, dr.fingerprint()), remove=([0], [1])))
+
+
+def test_compact_deltas_lineage_and_equivalence(wgraph, wstore):
+    """A compacted chain replays as ONE delta yet keeps the chain's
+    original tip fingerprint — identity is preserved, replay is O(1)."""
+    graph, fp = wgraph, wgraph.fingerprint()
+    store = wstore
+    deltas = []
+    for i, seed in enumerate((43, 47, 53)):
+        d = random_delta(graph, churn=0.01, seed=seed, base_fp=fp,
+                         grow_frac=0.02 if i == 1 else 0.0)
+        deltas.append(d)
+        res = apply_delta(store, d)
+        graph = apply_delta_to_graph(graph, d, check_fp=False)
+        store, fp = res.store, res.fingerprint
+
+    composed, tip = compact_deltas(deltas)
+    assert tip == fp, "compaction must keep the ORIGINAL tip identity"
+    replay = apply_delta_to_graph(wgraph, composed, check_fp=False)
+    assert replay.fingerprint() == graph.fingerprint()
+    assert replay.num_vertices == graph.num_vertices
+    # strict mode rejects a non-contiguous chain
+    with pytest.raises(ValueError, match="not contiguous"):
+        compact_deltas([deltas[0], deltas[2]])
+    # non-strict composes anyway (caller owns lineage then)
+    compact_deltas([deltas[0], deltas[2]], strict=False)
+
+
+# ---------------------------------------------------------------------------
+# Sharded growth + placement drift
+# ---------------------------------------------------------------------------
+
+def test_sharded_growth_keeps_resident_payloads():
+    """Growth on a sharded store: clean lanes' device payloads stay
+    resident (shards_reused accounting) and the grown sharded run is
+    bit-identical to the fused path."""
+    g = rmat(12, 8, seed=7, weighted=True)   # 4096 V -> 16 partitions
+    store = GraphStore(g, geom=GEOM)
+    cfg = PlanConfig(n_lanes=8)
+    ex = store.executor(gas.make_pagerank(max_iters=2), cfg, path="ref",
+                        shard=1)
+    ex.run(max_iters=2)
+    old_sh = store.plan(cfg).sharded_lanes(ex.devices)
+    delta = random_delta(g, churn=0.005, seed=11, hot_frac=0.05,
+                         grow_frac=0.01)
+    res = apply_delta(store, delta)
+    s = res.stats
+    assert s["grown_vertices"] > 0
+    assert s["shards_reused"] >= 1, "clean lanes must stay resident"
+    assert s["shard_bytes_reused"] > 0
+    new_sh = res.store.plan(cfg).sharded_lanes(ex.devices)
+    shared = sum(1 for a, b in zip(old_sh.lanes, new_sh.lanes)
+                 if a and a is b)
+    assert shared == s["shards_reused"]
+    pf, _ = res.store.executor(gas.make_pagerank(max_iters=2), cfg,
+                               path="ref").run(max_iters=2)
+    ps, _ = res.store.executor(gas.make_pagerank(max_iters=2), cfg,
+                               path="ref", shard=1).run(max_iters=2)
+    np.testing.assert_array_equal(pf, ps)
+
+
+def test_placement_rebalance_trigger(monkeypatch):
+    """rebuild_plans drops keep= pins and re-places from scratch when
+    the re-placement's imbalance exceeds the threshold. One CPU device
+    can never exceed max/mean = 1.0, so the drift predicate is forced
+    to fire — the machinery under test is the pop-and-replace path and
+    its accounting."""
+    assert not LanePlacement(
+        n_devices=2, num_little_lanes=1, device_of_lane=(0, 1),
+        lane_ests=(1.0, 1.0)).needs_rebalance(1.5)
+    assert LanePlacement(
+        n_devices=2, num_little_lanes=1, device_of_lane=(0, 0),
+        lane_ests=(1.0, 1.0)).needs_rebalance(1.5)
+
+    g = rmat(11, 8, seed=5, weighted=True)
+    store = GraphStore(g, geom=GEOM)
+    cfg = PlanConfig(n_lanes=8)
+    ex = store.executor(gas.make_pagerank(max_iters=2), cfg, path="ref",
+                        shard=1)
+    ex.run(max_iters=2)
+    delta = random_delta(g, churn=0.01, seed=13, hot_frac=0.05,
+                         grow_frac=0.01)
+    # without a threshold: pins kept, nothing re-placed
+    base = apply_delta(store, delta)
+    assert base.stats["placements_rebalanced"] == 0
+    assert base.stats["placement_imbalance"] >= 1.0
+    monkeypatch.setattr(LanePlacement, "needs_rebalance",
+                        lambda self, t: True)
+    res = apply_delta(store, delta, rebalance_threshold=1.0)
+    assert res.stats["placements_rebalanced"] == 1
+    pf, _ = res.store.executor(gas.make_pagerank(max_iters=2), cfg,
+                               path="ref").run(max_iters=2)
+    ps, _ = res.store.executor(gas.make_pagerank(max_iters=2), cfg,
+                               path="ref", shard=1).run(max_iters=2)
+    np.testing.assert_array_equal(pf, ps)
+
+
+# ---------------------------------------------------------------------------
+# Regroup (DBG re-registration)
+# ---------------------------------------------------------------------------
+
+def test_grouping_drift_and_reregister(wgraph, wstore):
+    # drift is profile-relative; test-scale graphs only separate
+    # dense from sparse under the scale-model HW (README §Perf model)
+    hw = api.TPU_V5E_SCALED
+    fresh = grouping_drift(wstore, hw=hw)
+    assert fresh["drift"] == 0.0, "a fresh store has no grouping drift"
+    assert fresh["partitions"] == len(wstore.infos)
+    # a re-registered store preserves identity and content, and its own
+    # drift is zero by construction
+    re = reregister(wstore, fingerprint="ff" * 16)
+    assert re.fingerprint() == "ff" * 16
+    assert re.graph.num_edges == wgraph.num_edges
+    assert grouping_drift(re, hw=hw)["drift"] == 0.0
+    # heavy uniform churn decays the frozen degree ordering: a fresh
+    # DBG pass classifies dense/sparse differently
+    d = random_delta(wgraph, churn=0.4, seed=9)
+    res = apply_delta(wstore, d)
+    drift = grouping_drift(res.store, hw=hw)
+    assert drift["drift"] > 0.0, \
+        "heavy churn must register as grouping drift"
+    assert drift["mismatched_partitions"] >= 1
+    # the repair: reregister and the drift is gone
+    repaired = reregister(res.store)
+    assert repaired.fingerprint() == res.store.fingerprint()
+    assert grouping_drift(repaired, hw=hw)["drift"] == 0.0
+    # results are preserved across the swap (min-gather app is exact)
+    assert np.array_equal(
+        _run(res.store, "bfs", {"root": 0}, "ref"),
+        _run(repaired, "bfs", {"root": 0}, "ref"))
+
+
+def test_regroup_policy_validation():
+    with pytest.raises(ValueError):
+        RegroupPolicy(drift_threshold=0.0)
+    with pytest.raises(ValueError):
+        RegroupPolicy(min_churn_frac=-0.1)
+    p = RegroupPolicy(min_churn_frac=0.5)
+    assert not p.churn_ready(4, 10)
+    assert p.churn_ready(5, 10)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: differential chains mixing growth/remove/update/compaction
+# ---------------------------------------------------------------------------
+
+def test_hypothesis_growth_chain_equivalence():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    geom = Geometry(U=128, W=128, T=128, E_BLK=128, big_batch=2)
+
+    @hyp.settings(max_examples=15, deadline=None)
+    @hyp.given(data=st.data())
+    def prop(data):
+        V = data.draw(st.integers(min_value=32, max_value=300), label="V")
+        n_edges = data.draw(st.integers(min_value=4, max_value=250),
+                            label="E")
+        rng = np.random.default_rng(
+            data.draw(st.integers(0, 2**31), label="seed"))
+        src = rng.integers(0, V, n_edges)
+        dst = rng.integers(0, V, n_edges)
+        w = rng.random(n_edges).astype(np.float32)
+        g = from_edges(src, dst, num_vertices=V, weights=w)
+        if g.num_edges == 0:
+            return
+        store0 = GraphStore(g, geom=geom)
+        store, graph, fp = store0, g, g.fingerprint()
+        deltas = []
+        n_steps = data.draw(st.integers(1, 3), label="steps")
+        for i in range(n_steps):
+            delta = random_delta(
+                graph,
+                churn=data.draw(st.floats(0.01, 0.3), label=f"churn{i}"),
+                seed=data.draw(st.integers(0, 2**31), label=f"ds{i}"),
+                update_frac=data.draw(st.floats(0.0, 0.2),
+                                      label=f"uf{i}"),
+                grow_frac=data.draw(
+                    st.sampled_from([0.0, 0.05, 0.2]), label=f"gf{i}"),
+                base_fp=fp)
+            deltas.append(delta)
+            res = apply_delta(store, delta)
+            graph = apply_delta_to_graph(graph, delta, check_fp=False)
+            store, fp = res.store, res.fingerprint
+
+        # incremental == cold rebuild under the extended frozen perm
+        perm_ext = np.concatenate([
+            np.asarray(store0.perm),
+            np.arange(g.num_vertices, graph.num_vertices,
+                      dtype=np.int32)])
+        cold = GraphStore(graph, geom=geom, perm=perm_ext)
+        _assert_stores_identical(store, cold)
+        assert np.array_equal(
+            _run(store, "pagerank", {}, "ref", max_iters=3),
+            _run(cold, "pagerank", {}, "ref", max_iters=3))
+        # compaction: the whole chain as ONE delta reproduces the same
+        # content AND the same tip identity
+        composed, tip = compact_deltas(deltas)
+        assert tip == fp
+        replay = apply_delta_to_graph(g, composed, check_fp=False)
+        assert replay.fingerprint() == graph.fingerprint()
+        assert replay.num_vertices == graph.num_vertices
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# Serving integration: growth updates, compaction, regroup
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def svc():
+    with api.GraphService(workers=2, default_geom=GEOM,
+                          default_path="ref") as s:
+        yield s
+
+
+def test_service_growth_update_retires_and_purges_executors(svc, wgraph):
+    """A growth update re-keys the snapshot like any delta: the old
+    store retires on drain and its warm executors — compiled against
+    the pre-growth layout — are purged with it."""
+    fp = svc.register(wgraph)
+    old_key = store_key(fp, GEOM, True)
+    svc.run(fingerprint=fp, app="pagerank", n_lanes=4, max_iters=3,
+            timeout=120)
+    assert any(k[0] == old_key for k in svc._executors), \
+        "warm run must cache an executor"
+    delta = random_delta(wgraph, churn=0.01, seed=5, grow_frac=0.02)
+    res = svc.update(fp, delta)
+    assert res.mode == "incremental"
+    assert res.retired == "now"
+    assert res.stats["grown_vertices"] > 0
+    assert old_key not in svc.cache
+    assert not any(k[0] == old_key for k in svc._executors), \
+        "retired snapshot's executors must not outlive it"
+    # the grown snapshot serves, bit-identical to a direct build
+    r, _ = svc.run(fingerprint=res.fingerprint, app="bfs",
+                   app_kwargs={"root": 0}, n_lanes=4, max_iters=4,
+                   timeout=120)
+    post = apply_delta_to_graph(wgraph, delta)
+    direct, _ = api.compile(post, "bfs", geom=GEOM, n_lanes=4,
+                            path="ref").run(max_iters=4)
+    assert np.array_equal(r, direct)
+
+
+def test_service_chain_compaction_bounds_replay(wgraph):
+    """max_chain_depth= compacts automatically: after many updates the
+    registered chain stays bounded, the compaction counter moves, and
+    a post-eviction cold rebuild (which replays the chain) still
+    serves the correct graph."""
+    with api.GraphService(workers=1, default_geom=GEOM,
+                          default_path="ref", max_chain_depth=2) as svc:
+        fp = svc.register(wgraph)
+        cur_fp, cur_g = fp, wgraph
+        for i in range(5):
+            d = random_delta(cur_g, churn=0.01, seed=60 + i,
+                             grow_frac=0.02 if i % 2 else 0.0,
+                             base_fp=cur_fp)
+            res = svc.update(cur_fp, d)
+            cur_g = apply_delta_to_graph(cur_g, d, check_fp=False)
+            cur_fp = res.fingerprint
+            assert svc._chain_depth(cur_fp) <= 2
+        snap = svc.metrics.snapshot()
+        assert snap["compactions"] >= 1
+        assert snap["max_chain_depth"] <= 2
+        # evict the live store: the cold rebuild replays the COMPACTED
+        # chain (O(1) deltas) and must reproduce the exact graph
+        skey = store_key(cur_fp, GEOM, True)
+        assert svc.cache.evict(skey)
+        r, _ = svc.run(fingerprint=cur_fp, app="bfs",
+                       app_kwargs={"root": 0}, n_lanes=4, max_iters=4,
+                       timeout=300)
+        direct, _ = api.compile(cur_g, "bfs", geom=GEOM, n_lanes=4,
+                                path="ref").run(max_iters=4)
+        assert np.array_equal(r, direct)
+        # explicit compaction on an already-flat chain is a no-op
+        out = svc.compact_chain(cur_fp)
+        assert out["compacted"] is False
+        with pytest.raises(KeyError):
+            svc.compact_chain("00" * 16)
+
+
+def test_service_regroup_swap(svc, wgraph):
+    """regroup_now(force=True): atomic in-place store swap under the
+    SAME key, executors purged (a put-replace fires no eviction hook),
+    counter recorded, results preserved."""
+    fp = svc.register(wgraph)
+    skey = store_key(fp, GEOM, True)
+    r0, _ = svc.run(fingerprint=fp, app="bfs", app_kwargs={"root": 0},
+                    n_lanes=4, max_iters=4, timeout=120)
+    assert any(k[0] == skey for k in svc._executors)
+    ev = svc.regroup_now(fingerprint=fp, force=True)
+    assert ev["applied"]
+    assert not any(k[0] == skey for k in svc._executors), \
+        "regroup swap must purge the old layout's executors"
+    assert skey in svc.cache, "swap replaces, never evicts the key"
+    assert svc.cache.peek(skey).fingerprint() == fp
+    assert svc.metrics.snapshot()["regroups"] == 1
+    r1, _ = svc.run(fingerprint=fp, app="bfs", app_kwargs={"root": 0},
+                    n_lanes=4, max_iters=4, timeout=120)
+    assert np.array_equal(r0, r1)
+    with pytest.raises(KeyError):
+        svc.regroup_now(fingerprint="00" * 16)
+
+
+def test_service_regroup_policy_triggers_on_churned_updates(wgraph):
+    """The policy path end to end: sync policy with a tiny churn floor
+    runs the drift check inside update(); heavy churn that decays the
+    frozen degree ordering past the threshold triggers the swap. The
+    policy carries the perf-model profile (drift is profile-relative)."""
+    policy = RegroupPolicy(drift_threshold=0.05, min_churn_frac=0.01,
+                           sync=True, hw=api.TPU_V5E_SCALED)
+    with api.GraphService(workers=1, default_geom=GEOM,
+                          default_path="ref", regroup=policy) as svc:
+        fp = svc.register(wgraph)
+        d = random_delta(wgraph, churn=0.4, seed=9, base_fp=fp)
+        res = svc.update(fp, d)
+        assert res.mode == "incremental"
+        assert svc.metrics.snapshot()["regroups"] == 1, \
+            "churn past the drift threshold must trigger regroup"
+        # the swapped store still answers to the chained fingerprint
+        skey = store_key(res.fingerprint, GEOM, True)
+        assert svc.cache.peek(skey).fingerprint() == res.fingerprint
+        r, _ = svc.run(fingerprint=res.fingerprint, app="bfs",
+                       app_kwargs={"root": 0}, n_lanes=4, max_iters=4,
+                       timeout=300)
+        post = apply_delta_to_graph(wgraph, d)
+        direct, _ = api.compile(post, "bfs", geom=GEOM, n_lanes=4,
+                                path="ref").run(max_iters=4)
+        assert np.array_equal(r, direct)
+
+
+def test_service_constructor_validation():
+    with pytest.raises(ValueError):
+        api.GraphService(max_chain_depth=0)
+    with pytest.raises(ValueError):
+        api.GraphService(rebalance_threshold=0.5)
+    with pytest.raises(TypeError):
+        api.GraphService(regroup="yes")
+
+
+# ---------------------------------------------------------------------------
+# Control plane: job records, typed HTTP errors, regraph_* gauges
+# ---------------------------------------------------------------------------
+
+def _post(url, body):
+    req = urllib.request.Request(
+        url + "/jobs", data=json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"})
+    return urllib.request.urlopen(req)
+
+
+def test_control_plane_growth_jobs_and_gauges(wgraph):
+    from repro.control import ControlPlane
+    with ControlPlane(default_geom=GEOM, default_path="ref",
+                      max_chain_depth=2) as plane:
+        fp = plane.register(wgraph)
+        V = wgraph.num_vertices
+        server, url = plane.serve_http()
+
+        # growth update over HTTP -> done record with the new lineage
+        with _post(url, {"kind": "update", "fingerprint": fp,
+                         "delta": {"add": {"src": [1, 2],
+                                           "dst": [V, V + 1],
+                                           "weights": [0.5, 0.25]},
+                                   "grow_to": V + 4}}) as r:
+            assert r.status == 201
+            rec = json.loads(r.read())
+        assert rec["kind"] == "update" and rec["state"] == "done"
+        assert rec["metrics"]["mode"] == "incremental"
+        assert rec["metrics"]["stats"]["grown_vertices"] == 4
+        new_fp = rec["metrics"]["fingerprint"]
+
+        # malformed growth delta: remove of a never-grown id -> typed 400
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(url, {"kind": "update", "fingerprint": new_fp,
+                        "delta": {"remove": {"src": [1],
+                                             "dst": [V + 100]}}})
+        assert ei.value.code == 400
+        assert json.loads(ei.value.read())["error"] == "bad_delta"
+        # structurally-bad delta bodies are 400 too, not 500
+        for bad in (None, [], {"bogus": 1},
+                    {"add": {"src": [1]}},          # dst missing
+                    {"add": [1, 2, 3, 4]},          # not edge lists
+                    {"grow_to": -5}):
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _post(url, {"kind": "update", "fingerprint": new_fp,
+                            "delta": bad})
+            assert ei.value.code == 400, bad
+        # unknown base fingerprint stays 404, unknown kind 400
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(url, {"kind": "update", "fingerprint": "00" * 16,
+                        "delta": {"grow_to": 10}})
+        assert ei.value.code == 404
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(url, {"kind": "defrag", "fingerprint": new_fp})
+        assert ei.value.code == 400
+
+        # compact job: the in-process chain (depth 1) has nothing to
+        # squash — the record still lands with the accounting
+        with _post(url, {"kind": "compact", "fingerprint": new_fp}) as r:
+            rec = json.loads(r.read())
+        assert rec["kind"] == "compact" and rec["state"] == "done"
+        assert rec["metrics"]["depth_before"] == 1
+        # regroup job (forced): applied + drift metric in the record
+        with _post(url, {"kind": "regroup", "fingerprint": new_fp,
+                         "force": True}) as r:
+            rec = json.loads(r.read())
+        assert rec["kind"] == "regroup" and rec["state"] == "done"
+        assert rec["metrics"]["applied"] is True
+        assert "drift" in rec["metrics"]
+
+        # deeper chain via the in-process API: compact_job does squash
+        cur_fp, cur_g = new_fp, None
+        post_g = apply_delta_to_graph(
+            wgraph, make_delta(fp, add=([1, 2], [V, V + 1],
+                                        [0.5, 0.25]), grow_to=V + 4),
+            check_fp=False)
+        cur_g = post_g
+        for i in range(2):
+            d = random_delta(cur_g, churn=0.01, seed=80 + i,
+                             base_fp=cur_fp)
+            cur_g = apply_delta_to_graph(cur_g, d, check_fp=False)
+            cur_fp = plane.service.update(cur_fp, d).fingerprint
+        rec = plane.compact_job(cur_fp)
+        assert rec.state == "done"
+        assert rec.metrics["depth_before"] >= 1
+
+        # regraph_* gauges in the merged exposition
+        prom = urllib.request.urlopen(url + "/metrics").read().decode()
+        for fam in ("regraph_compactions_total", "regraph_regroups_total",
+                    "regraph_chain_depth",
+                    "regraph_placements_rebalanced_total"):
+            assert fam in prom, fam
+        snap = plane.metrics_snapshot()
+        assert snap["service"]["regroups"] >= 1
